@@ -1,0 +1,20 @@
+"""Paper Fig 9/11/12: per-operator-group share of execution time,
+CPU-only vs accelerated configurations."""
+
+from __future__ import annotations
+
+from repro.core.report import group_table
+
+from benchmarks.common import CASES, profile_case
+
+
+def run(cases=None) -> str:
+    profiles = []
+    for alias, arch, batch, seq in (cases or CASES):
+        e, a = profile_case(alias, arch, batch, seq)
+        profiles += [e, a]
+    return group_table(profiles)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,54 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of cases (CI)")
+    args = ap.parse_args()
+
+    from benchmarks import breakdown, kernels, micro, opgroups, roofline_table
+    from benchmarks import top_table
+    from benchmarks.common import CASES
+
+    cases = CASES[:4] if args.quick else CASES
+
+    sections = [
+        ("Fig 1/5/8/10 — GEMM vs NonGEMM breakdown "
+         "(eager CPU measured / eager A100 modeled / compiled TPU modeled)",
+         lambda: breakdown.run(cases)),
+        ("Fig 9/11/12 — per-operator-group shares",
+         lambda: opgroups.run(cases)),
+        ("Table 5 — most expensive NonGEMM group (accelerated)",
+         lambda: top_table.run(cases)),
+        ("Table 2 — NonGEMM operator micro-benchmark",
+         lambda: micro.run(repeats=3, measure_eager=not args.quick)),
+        ("Table 2b — micro-bench on shapes harvested from a real trace",
+         lambda: micro.run_harvested()),
+        ("§4.5 — Pallas kernel fusion: modeled HBM traffic + correctness",
+         kernels.run),
+        ("§Roofline — dry-run roofline table (results/dryrun)",
+         roofline_table.run),
+    ]
+    for title, fn in sections:
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        try:
+            print(fn())
+        except Exception as e:  # keep the harness going
+            print(f"SECTION FAILED: {e!r}", file=sys.stderr)
+        print(f"[{time.time() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

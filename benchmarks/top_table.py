@@ -1,0 +1,20 @@
+"""Paper Table 5: the most expensive NonGEMM operator group per model on
+the accelerated platform."""
+
+from __future__ import annotations
+
+from repro.core.report import top_group_table
+
+from benchmarks.common import CASES, profile_case
+
+
+def run(cases=None) -> str:
+    profiles = []
+    for alias, arch, batch, seq in (cases or CASES):
+        _, a = profile_case(alias, arch, batch, seq)
+        profiles.append(a)
+    return top_group_table(profiles)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,37 @@
+"""Profile the whole zoo — the paper's case-study loop (§4) over both the
+paper's own models and the 10 assigned architectures.
+
+    PYTHONPATH=src python examples/profile_zoo.py [--full]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.report import breakdown_table, shift_summary
+
+from benchmarks.common import CASES, profile_case
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 12 cases (default: first 6)")
+    args = ap.parse_args()
+    cases = CASES if args.full else CASES[:6]
+
+    eager, acc = [], []
+    for alias, arch, batch, seq in cases:
+        print(f"profiling {alias} ...", flush=True)
+        e, a = profile_case(alias, arch, batch, seq)
+        eager.append(e)
+        acc.append(a)
+    print()
+    print(breakdown_table(eager + acc))
+    print(shift_summary(eager, acc))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: the NonGEMM Bench pipeline on one model, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py [arch]
+
+Plug-model-and-profile (paper Fig. 4): trace the model, classify every
+operator into the paper's groups, measure the eager CPU latency per op,
+model the accelerated latencies, and print the paper-style reports.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (profile_accelerated, profile_accelerated_eager,
+                        profile_eager)
+from repro.core.report import breakdown_table, group_table, top_group_table
+
+from benchmarks.common import build
+
+
+def main(arch: str = "gpt2-xl") -> None:
+    fwd, params, inputs = build(arch, 1, 16)
+    print(f"profiling {arch} (batch 1, seq 16, f32, full width) ...")
+    eager = profile_eager(fwd, params, inputs, name=arch, repeats=1)
+    a100 = profile_accelerated_eager(fwd, params, inputs, name=arch)
+    tpu = profile_accelerated(fwd, params, inputs, name=arch)
+
+    print("\n-- GEMM vs NonGEMM split (the paper's headline view) --")
+    print(breakdown_table([eager, a100, tpu]))
+    print("-- per-group shares --")
+    print(group_table([eager, a100, tpu]))
+    print("-- most expensive NonGEMM group (accelerated) --")
+    print(top_group_table([a100]))
+    print("top-5 op sites on the accelerated platform:")
+    for site, t, pct in a100.top_op_sites(k=5):
+        print(f"   {str(site):<36} {t * 1e6:9.1f} us  {pct:5.1f}%")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "gpt2-xl")

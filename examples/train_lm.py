@@ -1,0 +1,68 @@
+"""End-to-end training example: a ~100M-param decoder LM with the full
+runtime (sharded step, async checkpoints, preemption handler, straggler
+watchdog, bit-exact resume).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300          # ~100M
+    PYTHONPATH=src python examples/train_lm.py --steps 60 --tiny    # CI
+
+The 100M configuration is granite-family (RMSNorm + SwiGLU + GQA): 12L,
+d_model=768, d_ff=2048, vocab 32k. On this CPU container a step takes a
+few seconds; the same driver runs unchanged on a TPU mesh via
+launch/train.py.
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.models import init_lm
+from repro.optim import OptimizerConfig
+from repro.runtime import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    base = get_config("granite-3-8b")
+    if args.tiny:
+        cfg = base.replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                           head_dim=32, d_ff=512, vocab_size=2048,
+                           remat=False, loss_chunk=0, fsdp=False)
+        seq, batch = 64, 8
+    else:
+        cfg = base.replace(n_layers=12, d_model=768, n_heads=12,
+                           n_kv_heads=4, head_dim=64, d_ff=2048,
+                           vocab_size=32768, remat=False, loss_chunk=0,
+                           fsdp=False)
+        seq, batch = 256, 8
+    cfg = cfg.replace(name="train-lm-example")
+    print(f"model: {cfg.n_params() / 1e6:.1f}M params")
+
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(peak_lr=6e-4, warmup_steps=30,
+                        total_steps=args.steps),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                   global_batch=batch, seed=0),
+        init_params_fn=lambda: init_lm(jax.random.PRNGKey(0), cfg),
+        ckpt_dir=args.ckpt, ckpt_every=50, num_microbatches=2,
+        log_every=10)
+    trainer.install_preemption_handler()
+    if args.resume:
+        trainer.try_resume()
+    out = trainer.train(args.steps)
+    first = out["history"][0][1] if out["history"] else float("nan")
+    last = out["history"][-1][1] if out["history"] else float("nan")
+    print(f"loss {first:.3f} -> {last:.3f} over {out['step']} steps "
+          f"({out['stragglers']} straggler steps flagged)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Top byte/flop contributors of a partitioned HLO dump (dev/perf tool).
+
+Usage: python scripts/hlo_top.py <dump.txt> [N]
+"""
+import sys
+
+from repro.core import hlo as H
+
+
+def main(path: str, n: int = 25) -> None:
+    detail: list = []
+    out = H.analyze_partitioned(open(path).read(), detail=detail)
+    detail.sort(key=lambda r: -r[0])
+    print(f"TOTAL {out.bytes/1e9:.1f} GB  {out.flops/1e12:.2f} TF  "
+          f"coll {out.collective_bytes/1e9:.1f} GB")
+    for r in detail[:n]:
+        nb, fl, comp, name, op, rt, op_name = r
+        print(f"{nb/1e9:9.2f} GB {fl/1e9:9.2f} GF  {comp[:22]:<22} "
+              f"{name[:26]:<26} {op:<10} {rt[:28]:<28} {op_name[-60:]}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 25)

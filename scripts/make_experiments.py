@@ -1,0 +1,87 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from the dry-run
+JSONs (results/dryrun = baseline, results/dryrun_opt = optimized).
+
+Usage: PYTHONPATH=src python scripts/make_experiments.py > /tmp/tables.md
+"""
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(root, mesh):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ROOT, root, mesh, "*.json"))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_row(r, key="roofline"):
+    if "skipped" in r:
+        return None
+    t = r[key]
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | {t['mfu']:.3f} |")
+
+
+def table(root, mesh, key="roofline"):
+    rows = load(root, mesh)
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | useful | MFU |",
+             "|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for (a, s), r in rows.items():
+        line = fmt_row(r, key)
+        if line is None:
+            skips.append(f"{a} x {s}: {r['skipped']}")
+        else:
+            lines.append(line)
+    return "\n".join(lines), skips
+
+
+def dryrun_summary(root, mesh):
+    rows = load(root, mesh)
+    lines = ["| arch | shape | compile_s | args GB/dev | temp GB/dev "
+             "(XLA:CPU, f32-inflated) | coll GB/dev | n_micro |",
+             "|---|---|---|---|---|---|---|"]
+    for (a, s), r in rows.items():
+        if "skipped" in r:
+            continue
+        m = r.get("memory_analysis", {})
+        lines.append(
+            f"| {a} | {s} | {r['compile_s']} | "
+            f"{m.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/1e9:.2f} | "
+            f"{r['hlo']['collective_bytes']/1e9:.1f} | "
+            f"{r.get('num_microbatches', '-')} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("### Baseline roofline — single pod (16x16), Pallas-kernel memory model\n")
+    t, skips = table("dryrun", "single")
+    print(t)
+    print("\nSkipped cells (assignment-mandated):")
+    for s in skips:
+        print(f"- {s}")
+    print("\n### Baseline roofline — multi-pod (2x16x16)\n")
+    t, _ = table("dryrun", "multi")
+    print(t)
+    if glob.glob(os.path.join(ROOT, "dryrun_opt", "single", "*.json")):
+        print("\n### Optimized roofline — single pod (after §Perf iterations)\n")
+        t, _ = table("dryrun_opt", "single")
+        print(t)
+    if glob.glob(os.path.join(ROOT, "dryrun_opt", "multi", "*.json")):
+        print("\n### Optimized roofline — multi-pod (2x16x16)\n")
+        t, _ = table("dryrun_opt", "multi")
+        print(t)
+    print("\n### Dry-run artifacts — single pod\n")
+    print(dryrun_summary("dryrun", "single"))
+
+
+if __name__ == "__main__":
+    main()

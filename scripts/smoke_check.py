@@ -1,0 +1,46 @@
+"""Quick dev loop: one forward/loss/prefill/decode per reduced arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import (init_lm, lm_forward, lm_loss, init_lm_cache,
+                          lm_prefill, lm_decode)
+
+archs = sys.argv[1:] or ARCH_IDS
+
+for a in archs:
+    cfg = reduced(get_config(a))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    b, s = 2, 64
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+
+    logits = jax.jit(lambda p, x: lm_forward(p, x, cfg))(params, inputs)
+    assert logits.shape == (b, s, cfg.vocab_size), (a, logits.shape)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32)))), a
+
+    loss, metrics = jax.jit(lambda p, bt: lm_loss(p, bt, cfg))(
+        params, {"inputs": inputs, "labels": labels})
+    assert np.isfinite(float(loss)), (a, float(loss))
+
+    if cfg.causal:
+        last, caches = jax.jit(
+            lambda p, x: lm_prefill(p, x, cfg, max_len=s + 8))(params, inputs)
+        assert last.shape == (b, cfg.vocab_size)
+        tok = (labels[:, -1] if cfg.input_mode == "tokens"
+               else jax.random.normal(key, (b, cfg.d_model), jnp.float32))
+        step_logits, caches = jax.jit(
+            lambda p, t, c: lm_decode(p, t, jnp.int32(s), c, cfg))(
+            params, tok, caches)
+        assert step_logits.shape == (b, cfg.vocab_size)
+        assert not bool(jnp.any(jnp.isnan(step_logits.astype(jnp.float32))))
+    print(f"OK {a:<24} loss={float(loss):.3f}")
+print("all smoke checks passed")

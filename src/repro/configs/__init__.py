@@ -1,0 +1,116 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``get_config(name)`` returns the full published config; ``reduced(cfg)``
+returns a structurally identical small config for CPU smoke tests (same
+family, block pattern, norm/ffn/attention flavor — tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.models.common import ModelConfig, SHAPES, ShapeSpec, shape_applicable
+
+ARCH_IDS = [
+    "musicgen-large",
+    "stablelm-3b",
+    "granite-3-8b",
+    "gemma3-27b",
+    "qwen1.5-110b",
+    "recurrentgemma-2b",
+    "qwen2-moe-a2.7b",
+    "deepseek-v2-lite-16b",
+    "xlstm-350m",
+    "chameleon-34b",
+]
+
+PAPER_IDS = ["gpt2-xl", "llama2-7b", "bert-base", "vit-b16"]
+
+_MODULE_FOR = {
+    "musicgen-large": "musicgen_large",
+    "stablelm-3b": "stablelm_3b",
+    "granite-3-8b": "granite_3_8b",
+    "gemma3-27b": "gemma3_27b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "xlstm-350m": "xlstm_350m",
+    "chameleon-34b": "chameleon_34b",
+    "gpt2-xl": "paper_zoo",
+    "llama2-7b": "paper_zoo",
+    "bert-base": "paper_zoo",
+    "vit-b16": "paper_zoo",
+}
+
+_CACHE: Dict[str, ModelConfig] = {}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("_", "-")
+    if key not in _CACHE:
+        mod_name = _MODULE_FOR.get(key)
+        if mod_name is None:
+            raise KeyError(f"unknown architecture {name!r}; "
+                           f"known: {ARCH_IDS + PAPER_IDS}")
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        if mod_name == "paper_zoo":
+            _CACHE[key] = mod.CONFIGS[key]
+        else:
+            _CACHE[key] = mod.CONFIG
+    return _CACHE[key]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (one forward/train step)."""
+    pat = cfg.block_pattern
+    n_layers = len(pat) if len(pat) > 1 else 2
+    if cfg.is_moe and cfg.first_dense_layers:
+        n_layers += cfg.first_dense_layers
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    d_model = 64 * n_heads if cfg.resolved_head_dim >= 64 else 32 * n_heads
+    kw = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=min(cfg.resolved_head_dim, 64),
+        d_ff=4 * d_model if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        max_position=4096,
+        attn_chunk_q=64,
+        attn_chunk_kv=64,
+        mlstm_chunk=32,
+        loss_chunk=0,
+        fsdp=False,
+        remat=False,
+        # XLA:CPU cannot *execute* bf16 x bf16 -> f32 dots (DotThunk);
+        # smoke configs run f32 end-to-end. Full configs stay bf16 — the
+        # dry-run only lowers/compiles, never executes.
+        dtype="float32",
+        param_dtype="float32",
+    )
+    if cfg.is_moe:
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 2), moe_d_ff=2 * d_model,
+                  n_shared_experts=min(cfg.n_shared_experts, 1))
+    if cfg.mla:
+        kw.update(kv_lora_rank=64, qk_nope_dim=32, qk_rope_dim=16,
+                  v_head_dim=32, head_dim=48)
+    if cfg.lru_width:
+        kw.update(lru_width=d_model)
+    kw["window_size"] = min(cfg.window_size, 64)
+    kw["name"] = cfg.name + "-smoke"
+    return cfg.replace(**kw)
+
+
+__all__ = ["ARCH_IDS", "PAPER_IDS", "get_config", "all_configs", "reduced",
+           "ModelConfig", "SHAPES", "ShapeSpec", "shape_applicable"]

@@ -1,0 +1,31 @@
+"""chameleon-34b [vlm] — 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 [arXiv:2405.09818].
+
+Early-fusion: VQ image tokens live in the same 65536-entry vocabulary as
+text tokens, so the backbone is a plain token LM (``input_mode="tokens"``;
+the VQ-VAE image tokenizer is the stubbed frontend). Chameleon adds qk-norm
+for training stability; swiglu FFN, RMSNorm, RoPE.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    block_pattern=("attn",),
+    qk_norm=True,
+    pos_emb="rope",
+    norm="rmsnorm",
+    ffn="swiglu",
+    causal=True,
+    tie_embeddings=False,
+    loss_chunk=512,
+    fsdp=True,
+)

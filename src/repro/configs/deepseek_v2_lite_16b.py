@@ -1,0 +1,40 @@
+"""deepseek-v2-lite-16b [moe] — 27L d_model=2048 16H MLA (kv_lora=512)
+moe_d_ff=1408, 64 routed experts top-6 + 2 shared [arXiv:2405.04434].
+
+Multi-head Latent Attention: KV compressed into a 512-d latent; decode
+attends in latent space with absorbed projections (the MLA cache is
+(B, S, 512+64) instead of (B, S, H, 2*128) — an 8x Memory-group saving).
+First layer is a dense FFN (d_ff=10944), the rest are MoE.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=10944,
+    vocab_size=102400,
+    block_pattern=("attn",),
+    mla=True,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    moe_d_ff=1408,
+    capacity_factor=1.25,
+    first_dense_layers=1,
+    pos_emb="rope",
+    norm="rmsnorm",
+    ffn="swiglu",
+    causal=True,
+    tie_embeddings=False,
+    fsdp=True,
+)

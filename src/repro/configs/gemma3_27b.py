@@ -1,0 +1,37 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144 [hf:google/gemma-3 lineage].
+
+5:1 local:global attention pattern (window 1024), decoupled head_dim=128,
+qk-norm, pre+post RMSNorm around each sub-block (zero-centered scale),
+GeGLU FFN, sqrt(d)-scaled tied embeddings, 128k-class context. The 262k
+vocabulary makes the Logit-Computation group the dominant NonGEMM cost of
+the loss — hence ``loss_chunk`` (sequence-chunked CE, paper §4.5 direction).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    block_pattern=("local", "local", "local", "local", "local", "attn"),
+    window_size=1024,
+    pos_emb="rope",
+    norm="rmsnorm",
+    post_norm=True,
+    zero_centered_norm=True,
+    qk_norm=True,
+    ffn="geglu",
+    causal=True,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    loss_chunk=512,
+    fsdp=True,
+)

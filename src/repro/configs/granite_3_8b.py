@@ -1,0 +1,27 @@
+"""granite-3-8b [dense] — 40L d_model=4096 32H (GQA kv=8) d_ff=12800
+vocab=49155 [hf:ibm-granite/granite-3.0 lineage].
+
+Llama-style: RMSNorm, RoPE, SwiGLU, GQA with 8 KV heads, tied embeddings.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12800,
+    vocab_size=49155,
+    block_pattern=("attn",),
+    pos_emb="rope",
+    norm="rmsnorm",
+    ffn="swiglu",
+    causal=True,
+    tie_embeddings=True,
+    fsdp=True,
+)

@@ -1,0 +1,32 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (MHA, kv=32) d_ff=8192 vocab=2048 [arXiv:2306.05284].
+Backbone only: the EnCodec frontend is a stub — ``input_specs()`` feeds
+precomputed (B, S, d_model) frame embeddings (``input_mode="embeddings"``),
+and the head predicts one codebook of 2048 audio tokens. MusicGen uses
+sinusoidal positions, pre-LayerNorm blocks and GELU FFN (T5/Bart lineage).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    block_pattern=("attn",),
+    pos_emb="sinusoidal",
+    norm="layernorm",
+    ffn="gelu",
+    ffn_bias=True,
+    qkv_bias=False,
+    causal=True,
+    tie_embeddings=False,
+    input_mode="embeddings",
+    loss_chunk=0,
+)

@@ -1,0 +1,30 @@
+"""qwen1.5-110b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=49152
+vocab=152064 [hf:Qwen/Qwen1.5 lineage].
+
+Qwen-style: RMSNorm, RoPE, SwiGLU, QKV bias. The largest assigned arch:
+FSDP (ZeRO-3 over the data axis) is mandatory — 110B f32 master params +
+Adam moments do not fit 16 GiB/chip under TP=16 alone.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=49152,
+    vocab_size=152064,
+    block_pattern=("attn",),
+    pos_emb="rope",
+    norm="rmsnorm",
+    ffn="swiglu",
+    qkv_bias=True,
+    causal=True,
+    tie_embeddings=False,
+    loss_chunk=512,
+    fsdp=True,
+)

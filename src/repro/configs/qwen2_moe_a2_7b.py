@@ -1,0 +1,36 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (GQA kv=16) moe_d_ff=1408,
+60 routed experts top-4 + 4 shared experts [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+Every layer is MoE. 60 experts do not divide the model axis (16), so the
+sharding rules fall back to TP-within-expert (mlp dim, 1408/16=88) — see
+sharding/__init__.py; DESIGN.md §Arch-applicability discusses the tradeoff.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=151936,
+    block_pattern=("attn",),
+    n_experts=60,
+    top_k=4,
+    n_shared_experts=4,
+    moe_d_ff=1408,
+    capacity_factor=1.25,
+    first_dense_layers=0,
+    pos_emb="rope",
+    norm="rmsnorm",
+    ffn="swiglu",
+    qkv_bias=True,
+    causal=True,
+    tie_embeddings=False,
+    fsdp=True,
+)

@@ -1,0 +1,34 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 [arXiv:2402.19427 Griffin].
+
+Pattern: (rec, rec, attn) — two RG-LRU recurrent blocks per local-attention
+block (window 2048), GeGLU FFN, RMSNorm, sqrt(d)-scaled tied embeddings.
+Fixed-size recurrence state => long_500k decode is O(1)/token (runs the
+long-context shape).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=("rec", "rec", "local"),
+    window_size=2048,
+    lru_width=2560,
+    conv_width=4,
+    pos_emb="rope",
+    norm="rmsnorm",
+    ffn="geglu",
+    causal=True,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    loss_chunk=512,
+)

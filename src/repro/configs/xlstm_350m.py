@@ -1,0 +1,31 @@
+"""xlstm-350m [ssm] — 24L d_model=1024 4H vocab=50304 [arXiv:2405.04517].
+
+7:1 mLSTM:sLSTM block ratio. mLSTM blocks carry a matrix memory and run
+chunkwise-parallel in training; sLSTM blocks are sequential scalar-memory
+recurrences with a GeGLU FFN tail. No positional embedding (recurrence
+provides order); LayerNorm pre-norms. Fixed-size state => long_500k runs.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    remat_policy="proj",
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    mlstm_proj_factor=2.0,
+    slstm_ff_factor=4.0 / 3.0,
+    mlstm_chunk=256,
+    conv_width=4,
+    pos_emb="none",
+    norm="layernorm",
+    ffn="gelu",
+    causal=True,
+    tie_embeddings=False,
+)

@@ -1,0 +1,30 @@
+"""repro.core — the paper's contribution (NonGEMM Bench) as a JAX library.
+
+Pipeline (paper Fig. 4): capture -> classify -> profile -> post-process, plus
+the TPU roofline machinery used by the dry-run and benchmarks.
+"""
+
+from .taxonomy import (OpGroup, NONGEMM_GROUPS, scope_tag, parse_scope,
+                       classify, classify_hlo, is_gemm, is_nongemm)
+from .graph import OpRecord, capture, harvest_shapes
+from .interpreter import ProfilingInterpreter, TimedOp
+from .hlo import HloAnalysis, analyze_hlo, collective_bytes
+from .hardware import HardwareSpec, TPU_V5E, GPU_A100, CPU_HOST, get_hardware
+from .roofline import (RooflineTerms, roofline_from_hlo, group_latency_model,
+                       gemm_nongemm_split, train_model_flops,
+                       decode_model_flops, attention_flops)
+from .profiler import (ModelProfile, profile_eager, profile_accelerated,
+                       profile_accelerated_eager, profile_wallclock)
+from . import microbench, report
+
+__all__ = [
+    "OpGroup", "NONGEMM_GROUPS", "scope_tag", "parse_scope", "classify",
+    "classify_hlo", "is_gemm", "is_nongemm", "OpRecord", "capture",
+    "harvest_shapes", "ProfilingInterpreter", "TimedOp", "HloAnalysis",
+    "analyze_hlo", "collective_bytes", "HardwareSpec", "TPU_V5E", "GPU_A100",
+    "CPU_HOST", "get_hardware", "RooflineTerms", "roofline_from_hlo",
+    "group_latency_model", "gemm_nongemm_split", "train_model_flops",
+    "decode_model_flops", "attention_flops", "ModelProfile", "profile_eager",
+    "profile_accelerated", "profile_accelerated_eager", "profile_wallclock",
+    "microbench", "report",
+]

@@ -1,0 +1,75 @@
+"""Hardware models for the roofline / "accelerated view" analysis.
+
+The paper measures wall-clock on a CPU→GPU platform matrix (Table 3). This
+container is CPU-only and the deployment target is TPU v5e, so acceleration
+is *modeled*: every compiled-HLO instruction is assigned
+``max(flops/peak_flops, bytes/hbm_bw)`` seconds, and collectives
+``bytes/link_bw``. Constants for TPU v5e come from the assignment brief:
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI, 16 GiB HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    peak_flops_f32: float
+    hbm_bw: float               # bytes/s per chip
+    link_bw: float              # bytes/s per ICI link
+    hbm_bytes: float            # capacity per chip
+    vmem_bytes: float = 128 * 2 ** 20
+
+    def flops_time(self, flops: float, dtype: str = "bf16") -> float:
+        peak = self.peak_flops_bf16 if dtype == "bf16" else self.peak_flops_f32
+        return flops / peak
+
+    def mem_time(self, nbytes: float) -> float:
+        return nbytes / self.hbm_bw
+
+    def roofline_time(self, flops: float, nbytes: float,
+                      dtype: str = "bf16") -> float:
+        return max(self.flops_time(flops, dtype), self.mem_time(nbytes))
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16 * 2 ** 30,
+)
+
+#: A100-80GB-like model, used only to sanity-compare the reproduced shift
+#: against the paper's GPU numbers (NOT a deployment target here).
+GPU_A100 = HardwareSpec(
+    name="a100",
+    peak_flops_bf16=312e12,
+    peak_flops_f32=19.5e12,
+    hbm_bw=2039e9,
+    link_bw=600e9 / 12,
+    hbm_bytes=80 * 2 ** 30,
+    vmem_bytes=40 * 2 ** 20,
+)
+
+#: Rough host-CPU model (per-socket) for the eager/unaccelerated view when an
+#: analytic (rather than measured) CPU estimate is wanted.
+CPU_HOST = HardwareSpec(
+    name="cpu",
+    peak_flops_bf16=2e12,
+    peak_flops_f32=2e12,
+    hbm_bw=100e9,
+    link_bw=25e9,
+    hbm_bytes=256 * 2 ** 30,
+    vmem_bytes=64 * 2 ** 20,
+)
+
+BY_NAME = {h.name: h for h in (TPU_V5E, GPU_A100, CPU_HOST)}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    return BY_NAME[name]

@@ -1,0 +1,722 @@
+"""Compiled-HLO analyzer — the paper's "kernel granularity" view, on XLA.
+
+NonGEMM Bench profiles models both at graph-node level and at the lower
+kernel level (§3.2.2: "recording the performance metrics of each operator at
+the low level kernel granularity"). For an XLA target the analogue of the
+kernel stream is the scheduled HLO module: each top-level instruction
+(fusion, dot, collective, ...) is one executed kernel.
+
+This module parses ``compiled.as_text()`` and produces a trip-count-aware
+cost model of the program:
+
+* per-instruction FLOPs / HBM bytes, attributed to a paper operator group via
+  the ``metadata op_name`` (which carries ``ng:`` scope tags through XLA);
+* **collective bytes** summed over ``all-gather`` / ``all-reduce`` /
+  ``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` operand sizes —
+  the collective roofline term of the dry-run;
+* loop-awareness: ``while`` bodies (e.g. ``lax.scan`` over layers) are
+  weighted by XLA's ``known_trip_count``, which ``compiled.cost_analysis()``
+  does *not* do (it counts a scanned 48-layer body once — verified on this
+  JAX/XLA build).
+
+The parser is backend-agnostic text parsing; it never executes anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from .taxonomy import (COLLECTIVE_OPCODES, NONGEMM_GROUPS, OpGroup,
+                       classify_hlo)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f4e2m1fn": 0.5,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_METADATA_RE = re.compile(r'metadata=\{[^}]*?op_name="([^"]*)"')
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+#: matches both dialects: `%name (args) -> type {` (optimized dumps) and
+#: `ENTRY main.1 {` (unoptimized compiler_ir text)
+_COMP_START_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\)\s*->\s*[^{]*)?\{\s*$")
+_BARE_NAME_RE = re.compile(r"(?<![\w.%\-])([A-Za-z_][\w.\-]*)")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s+=\s+(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DOT_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+#: opcodes that are program structure, not data movement / compute
+_FREE_OPCODES = frozenset(
+    {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+     "after-all", "partition-id", "replica-id", "opt-barrier",
+     "get-dimension-size", "add-dependency", "domain"}
+)
+
+
+def _type_bytes_numel(type_str: str) -> Tuple[float, int]:
+    """Total bytes and total element count of an HLO type string."""
+    total_b = 0.0
+    total_n = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_n += n
+        total_b += n * _DTYPE_BYTES.get(dtype, 4)
+    return total_b, total_n
+
+
+def _balanced_operands(rest: str) -> Tuple[str, str]:
+    """Split ``rest`` (text after ``opcode(``) into operand text and trailer."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    out_bytes: float
+    out_numel: int
+    operands: List[str]
+    op_name: str = ""
+    attrs: str = ""
+    flops: float = 0.0
+    raw_operands: str = ""
+
+    @property
+    def group_site(self) -> Tuple[OpGroup, str]:
+        return classify_hlo(self.opcode, self.op_name)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    by_name: Dict[str, Instr] = dataclasses.field(default_factory=dict)
+    root: Optional[str] = None
+
+
+@dataclasses.dataclass
+class GroupCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    count: int = 0
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    """Trip-count-aware cost breakdown of one compiled module (per device)."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    by_group: Dict[str, GroupCost] = dataclasses.field(default_factory=dict)
+    n_instructions: int = 0
+    n_fusions: int = 0
+    fused_nongemm_sites: int = 0  # ng:-tagged NonGEMM ops absorbed into fusions
+
+    def group(self, g: OpGroup) -> GroupCost:
+        return self.by_group.setdefault(g.value, GroupCost())
+
+    @property
+    def gemm_flops(self) -> float:
+        return self.by_group.get(OpGroup.GEMM.value, GroupCost()).flops
+
+    @property
+    def nongemm_bytes(self) -> float:
+        return sum(c.bytes for g, c in self.by_group.items()
+                   if OpGroup(g) in NONGEMM_GROUPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "by_group": {g: dataclasses.asdict(c) for g, c in self.by_group.items()},
+            "n_instructions": self.n_instructions,
+            "n_fusions": self.n_fusions,
+            "fused_nongemm_sites": self.fused_nongemm_sites,
+        }
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    current: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and "=" not in line.split("(", 1)[0]:
+                current = Computation(name=m.group(2))
+                if m.group(1):
+                    entry = current.name
+                comps[current.name] = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root, name, rtype, opcode, rest = m.groups()
+        operand_text, trailer = _balanced_operands(rest)
+        operands = re.findall(r"%([\w.\-]+)", operand_text)
+        if not operands and operand_text.strip():
+            # unoptimized compiler_ir dialect: bare operand names
+            operands = [t for t in _BARE_NAME_RE.findall(operand_text)
+                        if not t[0].isdigit()]
+        meta = _METADATA_RE.search(trailer)
+        out_b, out_n = _type_bytes_numel(rtype)
+        instr = Instr(
+            name=name, opcode=opcode, result_type=rtype, out_bytes=out_b,
+            out_numel=out_n, operands=operands,
+            op_name=meta.group(1) if meta else "", attrs=trailer,
+            raw_operands=operand_text,
+        )
+        current.instrs.append(instr)
+        current.by_name[name] = instr
+        if is_root:
+            current.root = name
+    return comps, entry
+
+
+def _operand_bytes(instr: Instr, comp: Computation) -> float:
+    total = 0.0
+    for op in instr.operands:
+        src = comp.by_name.get(op)
+        if src is not None:
+            total += src.out_bytes
+    return total
+
+
+def _instr_bytes(instr: Instr, comp: Computation) -> float:
+    """HBM bytes for one instruction = touched operands + outputs.
+
+    Slicing/indexed ops only touch slice-sized data, NOT their full
+    operands — charging a loop-body ``dynamic-slice`` its whole stacked
+    operand would bill a scanned 48-layer model 48x its parameter bytes.
+    ``dynamic-update-slice`` is modeled as in-place (read update + write
+    slice): XLA aliases it inside while loops, which is how scanned layer
+    caches behave on TPU.
+    """
+    op = instr.opcode
+    if op in ("dynamic-slice", "gather"):
+        idx = sum(comp.by_name[o].out_bytes for o in instr.operands[1:]
+                  if o in comp.by_name)
+        return 2.0 * instr.out_bytes + idx
+    if op == "dynamic-update-slice":
+        upd = (comp.by_name[instr.operands[1]].out_bytes
+               if len(instr.operands) > 1
+               and instr.operands[1] in comp.by_name else instr.out_bytes)
+        return 2.0 * upd
+    if op == "scatter":
+        upd = (comp.by_name[instr.operands[2]].out_bytes
+               if len(instr.operands) > 2
+               and instr.operands[2] in comp.by_name else instr.out_bytes)
+        return 3.0 * upd  # read-modify-write of touched rows + indices
+    if op == "slice":
+        return 2.0 * instr.out_bytes
+    return instr.out_bytes + _operand_bytes(instr, comp)
+
+
+_SLICING_OPS = frozenset({"dynamic-slice", "gather", "slice"})
+
+
+def _fusion_bytes(instr: Instr, comp: Computation,
+                  comps: Dict[str, Computation], depth: int = 0) -> float:
+    """HBM traffic of one fusion: per-parameter touched bytes + root write.
+
+    Interior values live in registers/VMEM; HBM traffic is (a) each fused
+    parameter, charged slice-sized when every consumer inside the fusion is
+    a slicing op (this is how scanned-layer bodies read their per-layer
+    slice of stacked params/caches), and (b) the root write, charged
+    update-sized when the root is an in-place dynamic-update-slice.
+    """
+    m = _CALLS_RE.search(instr.attrs)
+    sub = comps.get(m.group(1)) if m else None
+    if sub is None or depth > 4:
+        return instr.out_bytes + _operand_bytes(instr, comp)
+
+    total = 0.0
+    # reads: map fused parameters -> their consumers
+    params = [i for i in sub.instrs if i.opcode == "parameter"]
+    for k, p in enumerate(params):
+        consumers = [i for i in sub.instrs if p.name in i.operands]
+        if consumers and all(c.opcode in _SLICING_OPS for c in consumers):
+            total += sum(c.out_bytes for c in consumers)
+        else:
+            src = (comp.by_name.get(instr.operands[k])
+                   if k < len(instr.operands) else None)
+            total += src.out_bytes if src is not None else p.out_bytes
+
+    # write: in-place DUS roots write only the update
+    root = sub.by_name.get(sub.root) if sub.root else None
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and len(root.operands) > 1 \
+            and root.operands[1] in sub.by_name:
+        total += sub.by_name[root.operands[1]].out_bytes
+    else:
+        total += instr.out_bytes
+    return total
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    """2 * out_numel * contracted_extent, from lhs shape + contracting dims."""
+    lhs = comp.by_name.get(instr.operands[0]) if instr.operands else None
+    if lhs is None:
+        return 0.0
+    shapes = _SHAPE_RE.findall(lhs.result_type)
+    if not shapes:
+        return 0.0
+    dims = [int(d) for d in shapes[0][1].split(",") if d] or []
+    m = _DOT_CONTRACT_RE.search(instr.attrs)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * instr.out_numel * contract
+
+
+_TRANSCENDENTAL = {"exponential", "tanh", "logistic", "log", "rsqrt", "sqrt",
+                   "power", "erf", "exponential-minus-one", "log-plus-one",
+                   "atan2", "sine", "cosine", "cbrt"}
+_ARITH = {"add", "subtract", "multiply", "divide", "negate", "maximum",
+          "minimum", "abs", "select", "compare", "clamp", "and", "or", "xor",
+          "not", "sign", "floor", "ceil", "round-nearest-afz",
+          "round-nearest-even", "shift-left", "shift-right-logical",
+          "shift-right-arithmetic", "remainder"}
+
+
+def _instr_flops(instr: Instr, comp: Computation,
+                 comps: Dict[str, Computation], seen: set) -> float:
+    op = instr.opcode
+    if op == "dot":
+        return _dot_flops(instr, comp)
+    if op == "convolution":
+        # estimate: 2 * out_numel * (operand1 numel / out_channels); coarse
+        rhs = comp.by_name.get(instr.operands[1]) if len(instr.operands) > 1 else None
+        if rhs is None:
+            return 2.0 * instr.out_numel
+        _, k_numel = _type_bytes_numel(rhs.result_type)
+        return 2.0 * instr.out_numel * max(k_numel, 1) ** 0.5  # coarse
+    if op == "fusion":
+        m = _CALLS_RE.search(instr.attrs)
+        if m and m.group(1) in comps and m.group(1) not in seen:
+            sub = comps[m.group(1)]
+            seen = seen | {m.group(1)}
+            return sum(_instr_flops(i, sub, comps, seen) for i in sub.instrs)
+        return float(instr.out_numel)
+    if op in ("reduce", "reduce-window"):
+        return float(sum(
+            _type_bytes_numel(comp.by_name[o].result_type)[1]
+            for o in instr.operands if o in comp.by_name
+        ))
+    if op in _TRANSCENDENTAL:
+        return 8.0 * instr.out_numel
+    if op in _ARITH:
+        return float(instr.out_numel)
+    if op in COLLECTIVE_OPCODES and "reduce" in op:
+        return float(instr.out_numel)
+    return 0.0
+
+
+def _fusion_group(instr: Instr, comps: Dict[str, Computation]) -> OpGroup:
+    """Attribute an untagged fusion by majority vote over its interior ops'
+    scope tags (each fused instruction keeps its own metadata), falling
+    back to the dominant non-trivial opcode group."""
+    m = _CALLS_RE.search(instr.attrs)
+    sub = comps.get(m.group(1)) if m else None
+    if sub is None:
+        return OpGroup.OTHER
+    votes: Dict[OpGroup, int] = {}
+    for i in sub.instrs:
+        g, _ = classify_hlo(i.opcode, i.op_name)
+        if g in (OpGroup.OTHER, OpGroup.CONTROL):
+            continue
+        w = 2 if "ng:" in i.op_name else 1
+        votes[g] = votes.get(g, 0) + w
+    if not votes:
+        return OpGroup.OTHER
+    return max(votes, key=votes.get)
+
+
+def analyze_hlo(hlo_text: str, default_trip: int = 1) -> HloAnalysis:
+    """Walk the module call graph from ENTRY with trip-count multipliers."""
+    comps, entry = parse_computations(hlo_text)
+    out = HloAnalysis()
+    if entry is None:
+        return out
+
+    def visit(comp_name: str, mult: float, depth: int = 0) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or depth > 24:
+            return
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op == "while":
+                t = _TRIP_RE.search(instr.attrs)
+                trip = int(t.group(1)) if t else default_trip
+                b = _BODY_RE.search(instr.attrs)
+                c = _COND_RE.search(instr.attrs)
+                if b:
+                    visit(b.group(1), mult * trip, depth + 1)
+                if c:
+                    visit(c.group(1), mult * (trip + 1), depth + 1)
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(instr.attrs)
+                if m:
+                    names = re.findall(r"%([\w.\-]+)", m.group(1))
+                    for n in names:  # conservative: count every branch once
+                        visit(n, mult, depth + 1)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", instr.attrs)
+                if m:
+                    visit(m.group(1), mult, depth + 1)
+                continue
+            if op in _FREE_OPCODES:
+                continue
+            if op.endswith("-done"):
+                continue  # counted at -start
+
+            group, _site = instr.group_site
+            flops = _instr_flops(instr, comp, comps, set()) * mult
+            if op == "fusion":
+                nbytes = _fusion_bytes(instr, comp, comps) * mult
+                if group == OpGroup.OTHER:
+                    group = _fusion_group(instr, comps)
+            else:
+                nbytes = _instr_bytes(instr, comp) * mult
+
+            out.n_instructions += 1
+            if op == "fusion":
+                out.n_fusions += 1
+                tags = len(re.findall(r"ng:(?!gemm)", instr.op_name))
+                out.fused_nongemm_sites += tags
+            gc = out.group(group)
+            gc.flops += flops
+            gc.bytes += nbytes
+            gc.count += 1
+            out.flops += flops
+            out.bytes += nbytes
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_OPCODES:
+                cb = _operand_bytes(instr, comp) * mult
+                out.collective_bytes += cb
+                out.collective_by_kind[base] = (
+                    out.collective_by_kind.get(base, 0.0) + cb)
+
+    visit(entry, 1.0)
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Shortcut used by the dry-run: trip-aware collective operand bytes."""
+    return analyze_hlo(hlo_text).collective_bytes
+
+
+# ===========================================================================
+# TPU-projected analysis of the *post-SPMD-partitioning, pre-optimization*
+# module (the dry-run's roofline source).
+# ===========================================================================
+# Why not the optimized module? XLA:CPU legalizes bf16 by storing every
+# bf16 buffer as f32 with rounding converts — optimized-CPU HLO doubles all
+# bf16 bytes and duplicates loop state (measured: 150x inflation on a
+# decode cell). The partitioned-but-unoptimized module has true dtypes,
+# per-device shapes, and materialized collectives; what it lacks is (a)
+# known_trip_count attrs — recovered from loop conditions below — and (b)
+# fusion — modeled with the standard "perfect elementwise fusion" rule:
+# a value hits HBM only if its producer is non-fusable, it has multiple
+# consumers, or it crosses a computation boundary (ROOT). Reads through
+# slicing ops are charged slice-sized. This mirrors how the TPU backend
+# fuses elementwise chains into GEMM/reduce epilogues.
+
+#: ops whose output stays in registers/VMEM inside a fusion
+_FUSABLE = frozenset(
+    {"add", "subtract", "multiply", "divide", "negate", "maximum", "minimum",
+     "abs", "sign", "floor", "ceil", "round-nearest-afz",
+     "round-nearest-even", "remainder", "power", "sqrt", "rsqrt", "cbrt",
+     "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+     "logistic", "erf", "sine", "cosine", "atan2", "and", "or", "xor",
+     "not", "select", "compare", "clamp", "convert", "bitcast",
+     "bitcast-convert", "broadcast", "iota", "reshape", "transpose",
+     "shift-left", "shift-right-logical", "shift-right-arithmetic",
+     "reduce-precision", "concatenate", "pad", "slice", "copy",
+     "dynamic-slice", "gather", "stochastic-convert"})
+
+#: fused reads of these are slice-sized from their (big) source buffer
+_SLICE_READS = frozenset({"slice", "dynamic-slice", "gather"})
+
+#: generated in-registers: no HBM read at all when fused
+_GENERATED = frozenset({"iota", "constant"})
+
+_TRANSPARENT = frozenset({"tuple", "get-tuple-element", "parameter",
+                          "constant", "after-all", "opt-barrier",
+                          "partition-id", "replica-id", "domain",
+                          "add-dependency"})
+
+
+def _loop_trip_count(cond: Computation) -> Optional[int]:
+    """Recover lax.scan trip counts: cond ROOT is compare(i, C) LT, i from 0
+    stepping 1 (how jax lowers scan; pre-opt modules lack the
+    known_trip_count attr the optimizer adds later)."""
+    root = cond.by_name.get(cond.root) if cond.root else None
+    if root is None or root.opcode != "compare":
+        return None
+    if "direction=LT" not in root.attrs:
+        return None
+    for op in root.operands:
+        src = cond.by_name.get(op)
+        if src is None or src.opcode != "constant":
+            continue
+        m = re.search(r"(-?\d+)", src.raw_operands)
+        if m:
+            return max(int(m.group(1)), 1)
+    return None
+
+
+@dataclasses.dataclass
+class PartitionedAnalysis(HloAnalysis):
+    pass
+
+
+#: named_scope markers whose regions lower to a single Pallas TPU kernel in
+#: the deployed system (kernels/): inside a region, intermediates live in
+#: VMEM — the analyzer bills only kernel-boundary HBM traffic. FLOPs are
+#: still counted (the MXU/VPU does the work either way).
+KERNEL_REGION_MARKERS = (
+    "ng:gemm:flash_attention",
+    "ng:normalization:rms_norm",
+    "ng:normalization:layer_norm",
+    "ng:normalization:fused_add_rms_norm",
+    "ng:activation:swiglu",
+    "ng:activation:geglu",
+    "ng:logit:softmax_cross_entropy",
+)
+
+
+def analyze_partitioned(hlo_text: str, detail: Optional[list] = None,
+                        kernel_regions: Tuple[str, ...] = ()) -> HloAnalysis:
+    """Fusion-modeled, trip-aware cost analysis of a partitioned module.
+
+    ``detail``: optional list; appends (bytes, flops, comp, instr, opcode,
+    result_type, op_name) per visited instruction (perf-iteration tooling).
+    ``kernel_regions``: scope markers billed as single kernels (see
+    KERNEL_REGION_MARKERS). Empty = XLA-fusion-only model (the baseline).
+    """
+    comps, entry = parse_computations(hlo_text)
+    out = HloAnalysis()
+    if entry is None:
+        return out
+
+    def marker_of(op_name: str) -> Optional[str]:
+        for mk in kernel_regions:
+            if mk in op_name:
+                return mk
+        return None
+
+    def visit(comp_name: str, mult: float, depth: int = 0,
+              bytes_on: bool = True) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or depth > 24:
+            return
+        consumers: Dict[str, List[Instr]] = {}
+        for instr in comp.instrs:
+            for op in set(instr.operands):
+                consumers.setdefault(op, []).append(instr)
+
+        mat_memo: Dict[str, bool] = {}
+
+        def is_materialized(instr: Instr) -> bool:
+            got = mat_memo.get(instr.name)
+            if got is not None:
+                return got
+            if instr.opcode in _TRANSPARENT:
+                r = False
+            elif instr.name == comp.root:
+                r = True
+            elif instr.opcode not in _FUSABLE:
+                r = True
+            else:
+                cons = consumers.get(instr.name, [])
+                r = (len(cons) > 1
+                     or any(c.opcode in ("while", "call", "conditional",
+                                         "sort", "scatter")
+                            for c in cons))
+            mat_memo[instr.name] = r
+            return r
+
+        read_memo: Dict[str, float] = {}
+
+        def read_bytes(name: str) -> float:
+            """HBM bytes a fused consumer pulls in for this value."""
+            got = read_memo.get(name)
+            if got is not None:
+                return got
+            src = comp.by_name.get(name)
+            if src is None:
+                return 0.0
+            if src.opcode in _GENERATED:
+                r = 0.0
+            elif (src.opcode in _TRANSPARENT or is_materialized(src)
+                  or (kernel_regions and marker_of(src.op_name))):
+                # kernel-region outputs are materialized at the boundary
+                r = src.out_bytes
+            elif src.opcode in _SLICE_READS:
+                r = src.out_bytes          # slice-sized read of the source
+            elif src.opcode == "broadcast":
+                r = sum(read_bytes(o) for o in src.operands)
+            else:                           # fused elementwise chain
+                r = sum(read_bytes(o) for o in src.operands)
+            read_memo[name] = r
+            return r
+
+        def instr_marker(instr: Instr) -> Optional[str]:
+            return marker_of(instr.op_name)
+
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op == "while":
+                trip = None
+                t = _TRIP_RE.search(instr.attrs)
+                if t:
+                    trip = int(t.group(1))
+                b = _BODY_RE.search(instr.attrs)
+                c = _COND_RE.search(instr.attrs)
+                if trip is None and c and c.group(1) in comps:
+                    trip = _loop_trip_count(comps[c.group(1)])
+                trip = trip if trip else 1
+                mk = instr_marker(instr)
+                if mk is not None and bytes_on:
+                    # the whole loop lowers to one Pallas kernel: bill its
+                    # boundary traffic once (operands in, results out) and
+                    # descend for FLOPs only.
+                    nb = (sum(read_bytes(o) for o in set(instr.operands))
+                          + instr.out_bytes) * mult
+                    gc = out.group(OpGroup.GEMM if "gemm" in mk
+                                   else OpGroup(mk.split(":")[1]))
+                    gc.bytes += nb
+                    out.bytes += nb
+                    if detail is not None:
+                        detail.append((nb, 0.0, comp_name, instr.name,
+                                       "kernel-region", instr.result_type,
+                                       instr.op_name))
+                    if b:
+                        visit(b.group(1), mult * trip, depth + 1,
+                              bytes_on=False)
+                    continue
+                if b:
+                    visit(b.group(1), mult * trip, depth + 1, bytes_on)
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(instr.attrs)
+                if m:
+                    for n in re.findall(r"%([\w.\-]+)", m.group(1)):
+                        visit(n, mult, depth + 1, bytes_on)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", instr.attrs)
+                if m:
+                    visit(m.group(1), mult, depth + 1, bytes_on)
+                continue
+            if op in _TRANSPARENT or op.endswith("-done"):
+                continue
+
+            group, _site = instr.group_site
+            flops = _instr_flops(instr, comp, comps, set()) * mult
+
+            mk = instr_marker(instr)
+            count_bytes = bytes_on
+            if mk is not None and bytes_on:
+                # inline kernel region: bill only values crossing the
+                # region boundary (different/no marker on the other side)
+                cons = consumers.get(instr.name, [])
+                ext_write = (instr.name == comp.root
+                             or any(instr_marker(c) != mk for c in cons))
+                nbytes = instr.out_bytes if ext_write else 0.0
+                for o in set(instr.operands):
+                    src = comp.by_name.get(o)
+                    if src is None:
+                        continue
+                    if src.opcode in _TRANSPARENT or instr_marker(src) != mk:
+                        if op in _SLICE_READS or op == "dynamic-update-slice":
+                            continue  # handled by out_bytes semantics below
+                        nbytes += read_bytes(o)
+                if op in _SLICE_READS:
+                    nbytes += instr.out_bytes
+                nbytes *= mult
+                count_bytes = False
+            else:
+                nbytes = 0.0
+
+            if count_bytes and is_materialized(instr):
+                if op == "dynamic-update-slice":
+                    # in-place: pull in the update chain + write the slice
+                    if len(instr.operands) > 1:
+                        upd_val = comp.by_name.get(instr.operands[1])
+                        write = (upd_val.out_bytes if upd_val is not None
+                                 else instr.out_bytes)
+                        nbytes += write + read_bytes(instr.operands[1])
+                    else:
+                        nbytes += instr.out_bytes
+                elif op in _SLICE_READS:
+                    nbytes += 2.0 * instr.out_bytes  # read slice + write
+                else:
+                    nbytes += instr.out_bytes        # write
+                    nbytes += sum(read_bytes(o)
+                                  for o in set(instr.operands))
+                nbytes *= mult
+
+            out.n_instructions += 1
+            gc = out.group(group)
+            gc.flops += flops
+            gc.bytes += nbytes
+            gc.count += 1
+            out.flops += flops
+            out.bytes += nbytes
+            if detail is not None and (nbytes or flops):
+                detail.append((nbytes, flops, comp_name, instr.name, op,
+                               instr.result_type, instr.op_name))
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_OPCODES:
+                cb = sum(comp.by_name[o].out_bytes for o in instr.operands
+                         if o in comp.by_name) * mult
+                out.collective_bytes += cb
+                out.collective_by_kind[base] = (
+                    out.collective_by_kind.get(base, 0.0) + cb)
+
+    visit(entry, 1.0)
+    return out

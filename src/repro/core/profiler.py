@@ -1,0 +1,142 @@
+"""End-to-end profiling flows (paper Fig. 4: the whole pipeline).
+
+Two complementary views of the same model:
+
+* :func:`profile_eager` — real wall-clock, one primitive at a time on the
+  host CPU (paper's unaccelerated eager baseline).
+* :func:`profile_accelerated` — ``jit``-compile, parse the HLO, and model
+  per-instruction latency on an accelerator roofline (paper's GPU-accelerated
+  measurements, adapted to TPU v5e per DESIGN.md §3).
+
+Both produce a :class:`ModelProfile` that post-processing (``report.py``)
+turns into the paper's tables/figures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Callable, Optional
+
+import jax
+
+from .hardware import HardwareSpec, TPU_V5E
+from .hlo import HloAnalysis, analyze_hlo
+from .interpreter import ProfilingInterpreter, TimedOp
+from .roofline import gemm_nongemm_split, group_latency_model
+from .taxonomy import NONGEMM_GROUPS, OpGroup
+
+
+@dataclasses.dataclass
+class ModelProfile:
+    name: str
+    mode: str                              # "eager_cpu" | "accelerated_<hw>"
+    group_seconds: dict                    # group -> seconds
+    total_seconds: float
+    op_seconds: dict                       # (group, op_site) -> seconds
+    n_ops: int
+    hlo: Optional[HloAnalysis] = None
+    timed_ops: Optional[list] = None
+
+    @property
+    def split(self) -> dict:
+        return gemm_nongemm_split(self.group_seconds)
+
+    def top_nongemm_groups(self, k: int = 3) -> list:
+        """Paper Table 5: most expensive NonGEMM operator groups."""
+        items = [(g, t) for g, t in self.group_seconds.items()
+                 if OpGroup(g) in NONGEMM_GROUPS]
+        items.sort(key=lambda kv: kv[1], reverse=True)
+        total = self.total_seconds or 1.0
+        return [(g, t, 100.0 * t / total) for g, t in items[:k]]
+
+    def top_op_sites(self, k: int = 10) -> list:
+        items = sorted(self.op_seconds.items(), key=lambda kv: kv[1],
+                       reverse=True)
+        total = self.total_seconds or 1.0
+        return [(site, t, 100.0 * t / total) for site, t in items[:k]]
+
+
+def _aggregate_timed(name: str, mode: str, ops: list[TimedOp]) -> ModelProfile:
+    group_s: dict = defaultdict(float)
+    op_s: dict = defaultdict(float)
+    for t in ops:
+        group_s[t.record.group.value] += t.seconds
+        op_s[(t.record.group.value, t.record.op_site)] += t.seconds
+    total = sum(group_s.values())
+    return ModelProfile(name=name, mode=mode, group_seconds=dict(group_s),
+                        total_seconds=total, op_seconds=dict(op_s),
+                        n_ops=len(ops), timed_ops=ops)
+
+
+def profile_eager(fn: Callable, *args, name: str = "model",
+                  repeats: int = 3, **kwargs) -> ModelProfile:
+    ops = ProfilingInterpreter(repeats=repeats).run(fn, *args, **kwargs)
+    return _aggregate_timed(name, "eager_cpu", ops)
+
+
+def profile_accelerated_eager(fn: Callable, *args, name: str = "model",
+                              hw: HardwareSpec = None,
+                              launch_overhead_s: float = 5e-6,
+                              **kwargs) -> ModelProfile:
+    """The paper's GPU setting: *eager* accelerated execution.
+
+    Each captured operator dispatches as its own kernel: per-op
+    max(flops/peak, bytes/bw) + a fixed launch overhead, no fusion. This is
+    the faithful model of the paper's torch-eager GPU measurements (their
+    §4 case studies) — and the baseline our XLA-fused / Pallas views then
+    improve on (§4.5 "bridge the gap").
+    """
+    from .graph import capture
+    from .hardware import GPU_A100
+
+    hw = hw or GPU_A100
+    records = capture(fn, *args, **kwargs)
+    group_s: dict = defaultdict(float)
+    op_s: dict = defaultdict(float)
+    n = 0
+    for r in records:
+        t = max(hw.flops_time(r.flops), hw.mem_time(r.bytes_accessed)) \
+            + launch_overhead_s * r.trip_count
+        group_s[r.group.value] += t
+        op_s[(r.group.value, r.op_site)] += t
+        n += 1
+    total = sum(group_s.values())
+    return ModelProfile(name=name, mode=f"eager_{hw.name}",
+                        group_seconds=dict(group_s), total_seconds=total,
+                        op_seconds=dict(op_s), n_ops=n)
+
+
+def profile_accelerated(fn: Callable, *args, name: str = "model",
+                        hw: HardwareSpec = TPU_V5E,
+                        hlo_text: Optional[str] = None,
+                        **kwargs) -> ModelProfile:
+    if hlo_text is None:
+        compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+        hlo_text = compiled.as_text()
+    analysis = analyze_hlo(hlo_text)
+    group_s = group_latency_model(analysis, hw)
+    # op-site attribution at instruction granularity
+    op_s: dict = defaultdict(float)
+    for g, cost in analysis.by_group.items():
+        op_s[(g, g)] += max(hw.flops_time(cost.flops), hw.mem_time(cost.bytes))
+    total = sum(group_s.values())
+    return ModelProfile(name=name, mode=f"accelerated_{hw.name}",
+                        group_seconds=group_s, total_seconds=total,
+                        op_seconds=dict(op_s), n_ops=analysis.n_instructions,
+                        hlo=analysis)
+
+
+def profile_wallclock(fn: Callable, *args, repeats: int = 5,
+                      **kwargs) -> float:
+    """Compiled end-to-end wall time (for CPU-measurable reduced configs)."""
+    jf = jax.jit(fn)
+    out = jf(*args, **kwargs)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jf(*args, **kwargs))
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -1,0 +1,94 @@
+"""Post-processing: aggregate profiles into the paper's tables & figures.
+
+(Paper §3.2.3 — "Post Processing cleans and aggregates the collected data
+into performance reports".) Everything renders as aligned-text / CSV so the
+benchmark harness can ``tee`` it.
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Iterable, Sequence
+
+from .profiler import ModelProfile
+from .taxonomy import NONGEMM_GROUPS, OpGroup
+
+GROUP_ORDER = [
+    OpGroup.GEMM, OpGroup.NORMALIZATION, OpGroup.ACTIVATION, OpGroup.MEMORY,
+    OpGroup.ELEMENTWISE, OpGroup.LOGIT, OpGroup.ROI, OpGroup.INTERPOLATION,
+    OpGroup.REDUCTION, OpGroup.COLLECTIVE, OpGroup.CONTROL, OpGroup.OTHER,
+]
+
+
+def _fmt_pct(x: float) -> str:
+    return f"{100.0 * x:5.1f}%"
+
+
+def breakdown_table(profiles: Sequence[ModelProfile]) -> str:
+    """Fig 1/5/8/10 analogue: GEMM vs NonGEMM share per (model, mode)."""
+    buf = io.StringIO()
+    buf.write(f"{'model':<28} {'mode':<22} {'total':>12} "
+              f"{'GEMM%':>7} {'NonGEMM%':>9}\n")
+    for p in profiles:
+        s = p.split
+        buf.write(f"{p.name:<28} {p.mode:<22} {p.total_seconds*1e3:>10.3f}ms "
+                  f"{_fmt_pct(s['gemm_frac']):>7} "
+                  f"{_fmt_pct(s['nongemm_frac']):>9}\n")
+    return buf.getvalue()
+
+
+def group_table(profiles: Sequence[ModelProfile]) -> str:
+    """Fig 9/11/12 analogue: per-operator-group share of total latency."""
+    buf = io.StringIO()
+    cols = [g.value[:8] for g in GROUP_ORDER]
+    buf.write(f"{'model':<28} {'mode':<22} " +
+              " ".join(f"{c:>8}" for c in cols) + "\n")
+    for p in profiles:
+        total = p.total_seconds or 1.0
+        row = [p.group_seconds.get(g.value, 0.0) / total for g in GROUP_ORDER]
+        buf.write(f"{p.name:<28} {p.mode:<22} " +
+                  " ".join(f"{100*r:>7.1f}%" for r in row) + "\n")
+    return buf.getvalue()
+
+
+def top_group_table(profiles: Sequence[ModelProfile]) -> str:
+    """Table 5 analogue: most expensive NonGEMM group per model."""
+    buf = io.StringIO()
+    buf.write(f"{'model':<28} {'mode':<22} {'top NonGEMM group':<18} "
+              f"{'% of exec time':>14}\n")
+    for p in profiles:
+        tops = p.top_nongemm_groups(k=1)
+        if tops:
+            g, _t, pct = tops[0]
+            buf.write(f"{p.name:<28} {p.mode:<22} {g:<18} {pct:>13.1f}%\n")
+    return buf.getvalue()
+
+
+def breakdown_csv(profiles: Sequence[ModelProfile]) -> str:
+    lines = ["model,mode,total_s,gemm_frac,nongemm_frac," +
+             ",".join(g.value for g in GROUP_ORDER)]
+    for p in profiles:
+        s = p.split
+        total = p.total_seconds or 1.0
+        row = [p.group_seconds.get(g.value, 0.0) / total for g in GROUP_ORDER]
+        lines.append(
+            f"{p.name},{p.mode},{p.total_seconds:.6e},"
+            f"{s['gemm_frac']:.4f},{s['nongemm_frac']:.4f}," +
+            ",".join(f"{r:.4f}" for r in row))
+    return "\n".join(lines) + "\n"
+
+
+def shift_summary(cpu_profiles: Sequence[ModelProfile],
+                  acc_profiles: Sequence[ModelProfile]) -> str:
+    """The headline claim (paper §4.5): NonGEMM share CPU->accelerated.
+
+    The paper reports 27% (CPU) -> 55% (GPU) averaged over its zoo.
+    """
+    def avg(ps):
+        fr = [p.split["nongemm_frac"] for p in ps]
+        return sum(fr) / len(fr) if fr else 0.0
+
+    a, b = avg(cpu_profiles), avg(acc_profiles)
+    return (f"average NonGEMM share: eager/cpu {100*a:.1f}%  ->  "
+            f"accelerated {100*b:.1f}%   "
+            f"(paper: 27% -> 55%; direction {'REPRODUCED' if b > a else 'NOT reproduced'})\n")

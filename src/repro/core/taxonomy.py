@@ -1,0 +1,284 @@
+"""Operator taxonomy — the paper's GEMM / NonGEMM operator groups.
+
+NonGEMM Bench (§2.1.2, Table 2) classifies every operator in an ML graph by
+*functionality*:
+
+    GEMM                   dot products / convolutions / linear / BMM
+    Normalization          LayerNorm / BatchNorm / RMSNorm / ...
+    Activation             ReLU / GELU / SiLU / ...
+    Memory                 reshape / view / permute / split / concat / gather ...
+    Element-wise Arithmetic add / mul / neg / div / ...
+    Logit Computation      softmax (and here: cross-entropy, router gating)
+    RoI Selection          NMS and friends
+    Interpolation          resize / interpolate
+
+We add three JAX/TPU-native groups that the torch-eager paper did not need:
+
+    Reduction              standalone reduce_{sum,max,...}, cum*, argmax
+    Collective             all-gather / all-reduce / all-to-all / ppermute ...
+    Control                scan / while / cond higher-order structure
+
+Classification has two sources, in priority order:
+
+1. **Scope tags** — the `repro.nn` operator library wraps every semantic op in
+   ``jax.named_scope(scope_tag(group, name))``. Tags survive into jaxpr
+   ``eqn.source_info.name_stack`` and into compiled-HLO ``metadata op_name``,
+   which is how both the eager interpreter and the HLO analyzer attribute
+   work to operator groups. This mirrors the paper's FX-node (nn.Module)
+   granularity.
+2. **Primitive/opcode fallback** — untagged jaxpr primitives and HLO opcodes
+   are classified structurally (``dot_general`` -> GEMM, ``reshape`` ->
+   Memory, ...).
+"""
+
+from __future__ import annotations
+
+import enum
+import re
+from typing import Optional, Tuple
+
+
+class OpGroup(str, enum.Enum):
+    GEMM = "gemm"
+    NORMALIZATION = "normalization"
+    ACTIVATION = "activation"
+    MEMORY = "memory"
+    ELEMENTWISE = "elementwise"
+    LOGIT = "logit"
+    ROI = "roi"
+    INTERPOLATION = "interpolation"
+    REDUCTION = "reduction"
+    COLLECTIVE = "collective"
+    CONTROL = "control"
+    OTHER = "other"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+#: The paper's NonGEMM umbrella: everything that is not a GEMM and not pure
+#: program structure. Collectives are reported separately (they are a
+#: distributed-systems cost, not an operator cost in the paper's sense).
+NONGEMM_GROUPS = frozenset(
+    {
+        OpGroup.NORMALIZATION,
+        OpGroup.ACTIVATION,
+        OpGroup.MEMORY,
+        OpGroup.ELEMENTWISE,
+        OpGroup.LOGIT,
+        OpGroup.ROI,
+        OpGroup.INTERPOLATION,
+        OpGroup.REDUCTION,
+        OpGroup.OTHER,
+    }
+)
+
+_TAG_PREFIX = "ng:"
+_TAG_RE = re.compile(r"ng:([a-z_]+):([A-Za-z0-9_.\-]+)")
+
+_GROUP_BY_VALUE = {g.value: g for g in OpGroup}
+
+
+def scope_tag(group: OpGroup | str, name: str) -> str:
+    """Build the named_scope tag for an operator site."""
+    g = group.value if isinstance(group, OpGroup) else str(group)
+    if g not in _GROUP_BY_VALUE:
+        raise ValueError(f"unknown operator group {g!r}")
+    return f"{_TAG_PREFIX}{g}:{name}"
+
+
+def parse_scope(scope_path: str) -> Optional[Tuple[OpGroup, str]]:
+    """Extract the innermost ``ng:<group>:<name>`` tag from a scope path."""
+    matches = _TAG_RE.findall(scope_path or "")
+    if not matches:
+        return None
+    g, name = matches[-1]  # innermost tag wins
+    group = _GROUP_BY_VALUE.get(g)
+    if group is None:
+        return None
+    return group, name
+
+
+# --------------------------------------------------------------------------
+# jaxpr primitive name -> group (fallback when no scope tag is present)
+# --------------------------------------------------------------------------
+
+_PRIM_GROUPS: dict[str, OpGroup] = {}
+
+
+def _reg(group: OpGroup, *names: str) -> None:
+    for n in names:
+        _PRIM_GROUPS[n] = group
+
+
+_reg(OpGroup.GEMM, "dot_general", "conv_general_dilated", "ragged_dot")
+_reg(
+    OpGroup.ACTIVATION,
+    "tanh", "logistic", "erf", "erfc", "erf_inv",
+)
+_reg(OpGroup.NORMALIZATION, "rsqrt")
+_reg(
+    OpGroup.MEMORY,
+    "reshape", "transpose", "broadcast_in_dim", "concatenate", "slice",
+    "dynamic_slice", "dynamic_update_slice", "gather", "scatter",
+    "scatter-add", "scatter_add", "scatter_mul", "scatter_min", "scatter_max",
+    "pad", "squeeze", "rev", "copy", "convert_element_type",
+    "bitcast_convert_type", "iota", "split", "expand_dims",
+)
+_reg(
+    OpGroup.ELEMENTWISE,
+    "add", "sub", "mul", "div", "neg", "max", "min", "pow", "integer_pow",
+    "abs", "sign", "floor", "ceil", "round", "rem", "exp", "exp2", "log",
+    "log1p", "expm1", "sqrt", "cbrt", "square", "and", "or", "xor", "not",
+    "select_n", "clamp", "nextafter", "is_finite", "eq", "ne", "lt", "le",
+    "gt", "ge", "atan2", "sin", "cos", "real", "imag", "complex", "conj",
+    "stop_gradient", "cumsum", "cumprod",
+)
+_reg(
+    OpGroup.REDUCTION,
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "reduce_precision", "cummax", "cummin",
+    "cumlogsumexp", "top_k", "sort",
+)
+_reg(
+    OpGroup.COLLECTIVE,
+    "psum", "all_gather", "all_to_all", "ppermute", "pmax", "pmin",
+    "psum_scatter", "reduce_scatter", "axis_index", "pbroadcast",
+)
+_reg(
+    OpGroup.CONTROL,
+    "scan", "while", "cond", "pjit", "closed_call", "core_call", "remat",
+    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+    "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr", "custom_lin",
+    "shard_map", "smap", "named_call", "pvary",
+)
+
+
+#: Higher-order primitives the eager interpreter descends into (inlining
+#: their sub-jaxpr under the parent scope) rather than timing opaquely.
+INLINE_PRIMS = frozenset(
+    {
+        "pjit", "closed_call", "core_call", "named_call", "remat",
+        "checkpoint", "custom_jvp_call", "custom_vjp_call",
+        "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr",
+    }
+)
+
+
+def classify_primitive(prim_name: str) -> OpGroup:
+    return _PRIM_GROUPS.get(prim_name, OpGroup.OTHER)
+
+
+def classify(prim_name: str, scope_path: str = "") -> Tuple[OpGroup, str]:
+    """Classify an op, preferring the semantic scope tag over the primitive.
+
+    Returns ``(group, op_site_name)``; untagged ops use the primitive name as
+    the site name.
+    """
+    tagged = parse_scope(scope_path)
+    if tagged is not None:
+        return tagged
+    return classify_primitive(prim_name), prim_name
+
+
+# --------------------------------------------------------------------------
+# HLO opcode -> group (fallback for the compiled-graph analyzer)
+# --------------------------------------------------------------------------
+
+COLLECTIVE_OPCODES = frozenset(
+    {
+        "all-gather", "all-gather-start", "all-gather-done",
+        "all-reduce", "all-reduce-start", "all-reduce-done",
+        "reduce-scatter",
+        "all-to-all", "ragged-all-to-all",
+        "collective-permute", "collective-permute-start",
+        "collective-permute-done", "collective-broadcast",
+    }
+)
+
+_HLO_OPCODE_GROUPS: dict[str, OpGroup] = {
+    "dot": OpGroup.GEMM,
+    "convolution": OpGroup.GEMM,
+    "tanh": OpGroup.ACTIVATION,
+    "logistic": OpGroup.ACTIVATION,
+    "erf": OpGroup.ACTIVATION,
+    "rsqrt": OpGroup.NORMALIZATION,
+    "reshape": OpGroup.MEMORY,
+    "transpose": OpGroup.MEMORY,
+    "broadcast": OpGroup.MEMORY,
+    "concatenate": OpGroup.MEMORY,
+    "slice": OpGroup.MEMORY,
+    "dynamic-slice": OpGroup.MEMORY,
+    "dynamic-update-slice": OpGroup.MEMORY,
+    "gather": OpGroup.MEMORY,
+    "scatter": OpGroup.MEMORY,
+    "pad": OpGroup.MEMORY,
+    "copy": OpGroup.MEMORY,
+    "copy-start": OpGroup.MEMORY,
+    "copy-done": OpGroup.MEMORY,
+    "convert": OpGroup.MEMORY,
+    "bitcast": OpGroup.MEMORY,
+    "bitcast-convert": OpGroup.MEMORY,
+    "iota": OpGroup.MEMORY,
+    "reduce": OpGroup.REDUCTION,
+    "reduce-window": OpGroup.REDUCTION,
+    "sort": OpGroup.REDUCTION,
+    "add": OpGroup.ELEMENTWISE,
+    "subtract": OpGroup.ELEMENTWISE,
+    "multiply": OpGroup.ELEMENTWISE,
+    "divide": OpGroup.ELEMENTWISE,
+    "negate": OpGroup.ELEMENTWISE,
+    "maximum": OpGroup.ELEMENTWISE,
+    "minimum": OpGroup.ELEMENTWISE,
+    "exponential": OpGroup.ELEMENTWISE,
+    "log": OpGroup.ELEMENTWISE,
+    "power": OpGroup.ELEMENTWISE,
+    "sqrt": OpGroup.ELEMENTWISE,
+    "abs": OpGroup.ELEMENTWISE,
+    "select": OpGroup.ELEMENTWISE,
+    "compare": OpGroup.ELEMENTWISE,
+    "clamp": OpGroup.ELEMENTWISE,
+    "while": OpGroup.CONTROL,
+    "conditional": OpGroup.CONTROL,
+    "call": OpGroup.CONTROL,
+    "tuple": OpGroup.CONTROL,
+    "get-tuple-element": OpGroup.CONTROL,
+    "parameter": OpGroup.CONTROL,
+    "constant": OpGroup.CONTROL,
+    "after-all": OpGroup.CONTROL,
+    "partition-id": OpGroup.CONTROL,
+    "replica-id": OpGroup.CONTROL,
+    "rng-bit-generator": OpGroup.OTHER,
+    "fusion": OpGroup.OTHER,  # refined by metadata / fused-root inspection
+}
+
+
+def classify_hlo(opcode: str, op_name: str = "") -> Tuple[OpGroup, str]:
+    """Classify a compiled-HLO instruction.
+
+    ``op_name`` is the instruction's ``metadata op_name`` string, which carries
+    the jax name-stack (and therefore our ``ng:`` tags) through compilation.
+    """
+    tagged = parse_scope(op_name)
+    if tagged is not None:
+        return tagged
+    if opcode in COLLECTIVE_OPCODES:
+        return OpGroup.COLLECTIVE, opcode
+    group = _HLO_OPCODE_GROUPS.get(opcode)
+    if group is not None:
+        return group, opcode
+    # XLA fusions without a tag: fall back to the op_name tail, which XLA
+    # sets from the representative (usually root) op of the fusion.
+    tail = (op_name or "").rsplit("/", 1)[-1]
+    prim_group = _PRIM_GROUPS.get(tail)
+    if prim_group is not None:
+        return prim_group, tail
+    return OpGroup.OTHER, opcode
+
+
+def is_gemm(group: OpGroup) -> bool:
+    return group == OpGroup.GEMM
+
+
+def is_nongemm(group: OpGroup) -> bool:
+    return group in NONGEMM_GROUPS

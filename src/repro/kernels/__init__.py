@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the NonGEMM hot spots NonGEMM Bench identifies.
+
+Layout (per assignment):
+    <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py     jit'd wrappers with the interpret switch (nn backend)
+    ref.py     pure-jnp oracles (the allclose ground truth)
+
+Kernels: norms (rmsnorm / layernorm / fused add+rmsnorm), swiglu / geglu,
+flash_attention (causal / window / GQA), softmax_xent (262k-vocab CE),
+nms (RoI Selection, TPU-adapted).
+"""

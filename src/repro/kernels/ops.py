@@ -1,0 +1,78 @@
+"""jit'd public wrappers over the Pallas kernels (the ``repro.nn`` backend).
+
+Every function takes ``interpret: bool`` — True runs the kernel body in
+Python on CPU (this container's validation mode), False emits the real
+Mosaic TPU kernel. Signatures match the ``repro.nn`` call sites exactly so
+``nn.set_backend("pallas"/"pallas_interpret")`` swaps implementations
+without touching model code.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import nms as _nms
+from repro.kernels import norms as _norms
+from repro.kernels import softmax_xent as _xent
+from repro.kernels import swiglu as _glu
+
+
+@partial(jax.jit, static_argnames=("eps", "zero_centered", "interpret"))
+def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False,
+             interpret: bool = False):
+    return _norms.rms_norm(x, scale, eps=eps, zero_centered=zero_centered,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "zero_centered", "interpret"))
+def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
+                       zero_centered: bool = False, interpret: bool = False):
+    return _norms.fused_add_rms_norm(x, residual, scale, eps=eps,
+                                     zero_centered=zero_centered,
+                                     interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def layer_norm(x, scale, bias, eps: float = 1e-5, interpret: bool = False):
+    return _norms.layer_norm(x, scale, bias, eps=eps, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def swiglu(gate, up, interpret: bool = False):
+    return _glu.swiglu(gate, up, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def geglu(gate, up, interpret: bool = False):
+    return _glu.geglu(gate, up, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "scale",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, scale=scale,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "block_vocab", "interpret"))
+def softmax_xent(logits, labels, block_rows: int = 8,
+                 block_vocab: int = 2048, interpret: bool = False):
+    return _xent.softmax_xent(logits, labels, block_rows=block_rows,
+                              block_vocab=block_vocab, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("iou_threshold", "score_threshold",
+                                   "interpret"))
+def nms(boxes, scores, iou_threshold: float = 0.5,
+        score_threshold: float = 0.0, interpret: bool = False):
+    return _nms.nms(boxes, scores, iou_threshold=iou_threshold,
+                    score_threshold=score_threshold, interpret=interpret)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These mirror the tagged ``repro.nn`` implementations but carry no scope
+tags and no backend switch — they exist so kernel sweeps can
+``assert_allclose`` against a single authoritative definition.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    s = scale.astype(jnp.float32)
+    y = y * (1.0 + s) if zero_centered else y * s
+    return y.astype(x.dtype)
+
+
+def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
+                       zero_centered: bool = False):
+    r = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(r, scale, eps=eps, zero_centered=zero_centered), r
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def swiglu(gate, up):
+    gf = gate.astype(jnp.float32)
+    return (gf * jax.nn.sigmoid(gf) * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0):
+    """Naive full-matrix GQA attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(d)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bkgqd", p, vf)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d).astype(v.dtype)
+
+
+def softmax_xent(logits, labels):
+    """Per-row CE. logits (R, V) any float dtype; labels (R,) int32."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    picked = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    return lse - picked
+
+
+def nms(boxes, scores, iou_threshold: float = 0.5,
+        score_threshold: float = 0.0):
+    """Greedy NMS keep-mask, torchvision semantics. boxes (N,4) xyxy."""
+    n = boxes.shape[0]
+    order = jnp.argsort(-scores)
+    b = boxes[order]
+    s = scores[order]
+    x1, y1, x2, y2 = b[:, 0], b[:, 1], b[:, 2], b[:, 3]
+    area = jnp.maximum(x2 - x1, 0) * jnp.maximum(y2 - y1, 0)
+    ix1 = jnp.maximum(x1[:, None], x1[None, :])
+    iy1 = jnp.maximum(y1[:, None], y1[None, :])
+    ix2 = jnp.minimum(x2[:, None], x2[None, :])
+    iy2 = jnp.minimum(y2[:, None], y2[None, :])
+    inter = jnp.maximum(ix2 - ix1, 0) * jnp.maximum(iy2 - iy1, 0)
+    union = area[:, None] + area[None, :] - inter
+    iou = jnp.where(union > 0, inter / union, 0.0)
+    valid = s > score_threshold
+
+    def body(i, keep):
+        alive = keep[i] & valid[i]
+        suppress = (iou[i] > iou_threshold) & (jnp.arange(n) > i) & alive
+        return keep & ~suppress
+
+    keep_sorted = jax.lax.fori_loop(0, n, body, valid)
+    return jnp.zeros((n,), bool).at[order].set(keep_sorted)

@@ -1,0 +1,85 @@
+"""Pallas TPU fused softmax-cross-entropy over huge vocabularies.
+
+The Logit-Computation group dominates the loss of big-vocab archs
+(gemma3-27b: V=262144 — an unfused CE materializes (B, S, V) f32 logits,
+a (B, S, V) exp, and a (B, S, V) probability tensor: 3 passes over
+~4 GiB/microbatch). This kernel streams vocab tiles through VMEM keeping an
+online (m, l) logsumexp carry plus the picked label logit — the full
+(rows, V) tensor is read exactly once and nothing of size V is written.
+
+grid = (n_rows, n_vocab_tiles), vocab innermost; carries in VMEM scratch
+(the same revisited-block pattern as flash attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _xent_kernel(logits_ref, labels_ref, o_ref, m_ref, l_ref, pick_ref, *,
+                 bv: int, nv: int, vocab: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        pick_ref[...] = jnp.zeros_like(pick_ref)
+
+    x = logits_ref[...].astype(jnp.float32)          # (br, bv)
+    br = x.shape[0]
+    cols = j * bv + jax.lax.broadcasted_iota(jnp.int32, (br, bv), 1)
+    x = jnp.where(cols < vocab, x, NEG_INF)          # vocab padding
+
+    labels = labels_ref[...]                         # (br, 1) int32
+    hit = (cols == labels)
+    pick_ref[...] += jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1, keepdims=True))
+    l_ref[...] = (l_ref[...] * jnp.exp(m_prev - m_new)
+                  + jnp.sum(jnp.exp(x - m_new), axis=-1, keepdims=True))
+    m_ref[...] = m_new
+
+    @pl.when(j == nv - 1)
+    def _finish():
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        o_ref[...] = (lse - pick_ref[...]).astype(o_ref.dtype)
+
+
+def softmax_xent(logits, labels, block_rows: int = 8, block_vocab: int = 2048,
+                 interpret: bool = False):
+    """logits (R, V) any float; labels (R,) int32 -> per-row CE (R,) f32."""
+    r, v = logits.shape
+    br = min(block_rows, max(r, 1))
+    bv = min(block_vocab, v)
+    pr, pv = -r % br, -v % bv
+    x = jnp.pad(logits, ((0, pr), (0, pv))) if (pr or pv) else logits
+    lab = jnp.pad(labels, (0, pr)) if pr else labels
+    lab2 = lab[:, None].astype(jnp.int32)
+    nr = x.shape[0] // br
+    nv = x.shape[1] // bv
+    out = pl.pallas_call(
+        functools.partial(_xent_kernel, bv=bv, nv=nv, vocab=v),
+        grid=(nr, nv),
+        in_specs=[
+            pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((br, 1), jnp.float32),
+            pltpu.VMEM((br, 1), jnp.float32),
+            pltpu.VMEM((br, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, lab2)
+    return out[:r, 0]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel fusing the Activation + Elem-wise groups of a GLU FFN.
+
+``silu(gate) * up`` done unfused is three tensor passes over the (B, S, F)
+hidden (read gate / write silu; read silu + up / write product). Fused it is
+one read of each operand and one write — a 2.5x traffic cut on a tensor that
+is ``d_ff/d_model``x bigger than the residual stream (paper groups:
+Activation was the top NonGEMM cost of GPT-2 at 23%, Elem-wise of Llama-2 at
+23%, Table 5).
+
+Tiling: flattened-2D (block_rows, block_cols) tiles; both operands stream
+through VMEM once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * jax.nn.sigmoid(g) * u).astype(o_ref.dtype)
+
+
+def _geglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (jax.nn.gelu(g, approximate=True) * u).astype(o_ref.dtype)
+
+
+def _glu_call(kernel, gate, up, block_rows: int, block_cols: int,
+              interpret: bool):
+    shape = gate.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    g2 = gate.reshape(rows, d)
+    u2 = up.reshape(rows, d)
+    pr, pc = -rows % block_rows, -d % block_cols
+    if pr or pc:
+        g2 = jnp.pad(g2, ((0, pr), (0, pc)))
+        u2 = jnp.pad(u2, ((0, pr), (0, pc)))
+    grid = (g2.shape[0] // block_rows, g2.shape[1] // block_cols)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(g2.shape, gate.dtype),
+        interpret=interpret,
+    )(g2, u2)
+    return out[:rows, :d].reshape(shape)
+
+
+def swiglu(gate, up, block_rows: int = 256, block_cols: int = 512,
+           interpret: bool = False):
+    return _glu_call(_swiglu_kernel, gate, up, block_rows, block_cols,
+                     interpret)
+
+
+def geglu(gate, up, block_rows: int = 256, block_cols: int = 512,
+          interpret: bool = False):
+    return _glu_call(_geglu_kernel, gate, up, block_rows, block_cols,
+                     interpret)

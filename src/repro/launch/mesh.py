@@ -1,0 +1,30 @@
+"""Production meshes.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run pins the device count via XLA_FLAGS
+*before* the first jax init; anything that forces an earlier init would
+lock the real 1-device topology in).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds the 2-pod DCI axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh over the real local device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct input stand-ins + sharding trees for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns abstract inputs for the step the shape
+lowers (train -> train_step batch; prefill -> token batch; decode -> one
+token + the seq_len-deep cache). Nothing here allocates device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.core.roofline import attention_flops
+from repro.models import init_lm, init_lm_cache
+from repro.models.common import ModelConfig, SHAPES, ShapeSpec
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.runtime import TrainState, pick_microbatches
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_lm(key, cfg))
+
+
+def abstract_state(cfg: ModelConfig, opt_cfg: Optional[OptimizerConfig] = None):
+    opt_cfg = opt_cfg or OptimizerConfig()
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda: init_opt_state(
+        jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params), opt_cfg))
+    return TrainState(params, opt)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_lm_cache(cfg, batch, max_len))
+
+
+def train_microbatches(cfg: ModelConfig, shape: ShapeSpec, n_data: int,
+                       budget_bytes: float = 4e9) -> int:
+    per_dev = max(shape.global_batch // n_data, 1)
+    return pick_microbatches(cfg, shape.seq_len, per_dev, budget_bytes)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None,
+                num_microbatches: int = 1) -> dict:
+    """Abstract model inputs for this (arch x shape) cell.
+
+    train:   {"inputs": (B, S)[xV], "labels": (B, S)} — microbatched to
+             (n_micro, B/n_micro, S) when num_microbatches > 1
+    prefill: {"tokens": (B, S)}
+    decode:  {"token": (B,), "pos": (), "caches": <seq_len-deep cache>}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok_dt = jnp.int32
+
+    def tok_spec(bsz, slen):
+        if cfg.input_mode == "tokens":
+            return sds((bsz, slen), tok_dt)
+        return sds((bsz, slen, cfg.d_model), cfg.dtype)
+
+    if shape.kind == "train":
+        mb = b // num_microbatches
+        if num_microbatches > 1:
+            inputs = (sds((num_microbatches, mb, s), tok_dt)
+                      if cfg.input_mode == "tokens"
+                      else sds((num_microbatches, mb, s, cfg.d_model),
+                               cfg.dtype))
+            labels = sds((num_microbatches, mb, s), tok_dt)
+        else:
+            inputs = tok_spec(b, s)
+            labels = sds((b, s), tok_dt)
+        return {"batch": {"inputs": inputs, "labels": labels}}
+
+    if shape.kind == "prefill":
+        return {"tokens": tok_spec(b, s)}
+
+    # decode: one new token against a seq_len-deep cache
+    token = (sds((b,), tok_dt) if cfg.input_mode == "tokens"
+             else sds((b, cfg.d_model), cfg.dtype))
+    caches = abstract_caches(cfg, b, s)
+    return {"token": token, "pos": sds((), jnp.int32), "caches": caches,
+            "key": sds((2,), jnp.uint32)}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) + attention terms."""
+    n_active = cfg.n_params_active()
+    b, s = shape.global_batch, shape.seq_len
+    kinds = cfg.layer_kinds()
+    attn = 0.0
+    for kind in kinds:
+        if kind not in ("attn", "local"):
+            continue
+        window = cfg.window_size if kind == "local" else None
+        hd = (cfg.qk_nope_dim + cfg.qk_rope_dim) if cfg.mla \
+            else cfg.resolved_head_dim
+        if shape.kind == "train":
+            attn += attention_flops(b, s, cfg.n_heads, hd,
+                                    causal=cfg.causal, window=window,
+                                    train=True)
+        elif shape.kind == "prefill":
+            attn += attention_flops(b, s, cfg.n_heads, hd,
+                                    causal=cfg.causal, window=window,
+                                    train=False)
+        else:  # decode: one token attends to the full cache
+            t = min(window, s) if window else s
+            attn += 2 * 2.0 * b * cfg.n_heads * hd * t
+    if shape.kind == "train":
+        return 6.0 * n_active * (b * s) + attn
+    if shape.kind == "prefill":
+        return 2.0 * n_active * (b * s) + attn
+    return 2.0 * n_active * b + attn

@@ -1,0 +1,13 @@
+"""Model zoo: one decoder stack, many mixer flavors (see transformer.py)."""
+
+from repro.models.common import (ModelConfig, SHAPES, ShapeSpec,
+                                 LONG_CONTEXT_ARCHS, shape_applicable,
+                                 count_params)
+from repro.models.transformer import (init_lm, lm_forward, lm_loss,
+                                      init_lm_cache, lm_prefill, lm_decode)
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeSpec", "LONG_CONTEXT_ARCHS",
+    "shape_applicable", "count_params", "init_lm", "lm_forward", "lm_loss",
+    "init_lm_cache", "lm_prefill", "lm_decode",
+]

@@ -1,0 +1,230 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch is the scatter/gather formulation (TPU-friendly, static shapes):
+tokens are scattered into an (E, C, D) buffer by (expert, position-in-expert)
+— position from a cumulative-sum over the flat token stream — experts run as
+one batched einsum, and results gather back weighted by router probabilities.
+Tokens beyond an expert's capacity C are dropped (standard GShard/Switch
+semantics; ``capacity_factor`` controls C).
+
+Router softmax is a Logit-Computation op, the dispatch/combine machinery is
+Memory + Reduction work — this layer is one of the most NonGEMM-dense parts
+of the zoo, which is exactly why the paper's profiler needs to see it.
+Experts are sharded over the ``model`` mesh axis (EP).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.taxonomy import OpGroup
+from repro.models.common import ModelConfig, dense_init
+from repro.sharding import shard
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             n_experts: int = 0) -> dict:
+    """Dense FFN (n_experts=0) or stacked expert FFN (E leading dim)."""
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    glu = cfg.ffn in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    lead = (n_experts,) if n_experts else ()
+    p = {
+        "w_up": dense_init(ks[0], (*lead, d, ff), in_axis=len(lead), dtype=pd),
+        "w_down": dense_init(ks[1], (*lead, ff, d), in_axis=len(lead), dtype=pd),
+    }
+    if glu:
+        p["w_gate"] = dense_init(ks[2], (*lead, d, ff), in_axis=len(lead),
+                                 dtype=pd)
+    if cfg.ffn_bias:
+        p["b_up"] = jnp.zeros((*lead, ff), pd)
+        p["b_down"] = jnp.zeros((*lead, d), pd)
+    return p
+
+
+def ffn_forward(params, x, cfg: ModelConfig):
+    """Dense FFN on (..., D)."""
+    up = nn.linear(x, params["w_up"].astype(x.dtype),
+                   params.get("b_up", None))
+    if cfg.ffn in ("swiglu", "geglu"):
+        gate = nn.linear(x, params["w_gate"].astype(x.dtype))
+        h = nn.swiglu(gate, up) if cfg.ffn == "swiglu" else nn.geglu(gate, up)
+    elif cfg.ffn == "gelu":
+        h = nn.gelu(up)
+    elif cfg.ffn == "relu":
+        h = nn.relu(up)
+    else:
+        h = nn.silu(up)
+    return nn.linear(h, params["w_down"].astype(x.dtype),
+                     params.get("b_down", None))
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, cfg.n_experts), dtype=pd),
+        "experts": init_ffn(ks[1], cfg, d_ff=cfg.moe_d_ff,
+                            n_experts=cfg.n_experts),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks[2], cfg,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+@jax.custom_vjp
+def _edot_up(x, w):
+    """(S,E,C,D) x (E,D,F) -> (S,E,C,F), with a weight-grad VJP that stays
+    shard-local: dW = sum_s einsum(x_s, g_s) — per-shard partials reduced
+    over the data axis (43 MB f32/layer). Without this, GSPMD gathers the
+    full f32 dispatch buffer to every device to do the contraction in one
+    dot (measured 1.1 TB/device/step on qwen2-moe; §Perf iteration 7)."""
+    return jnp.einsum("secd,edf->secf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _edot_up_fwd(x, w):
+    return _edot_up(x, w), (x, w)
+
+
+def _edot_up_bwd(res, g):
+    x, w = res
+    dx = jnp.einsum("secf,edf->secd", g, w,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    dwp = jnp.einsum("secd,secf->sedf", x, g,
+                     preferred_element_type=jnp.float32)
+    return dx, jnp.sum(dwp, axis=0).astype(w.dtype)
+
+
+_edot_up.defvjp(_edot_up_fwd, _edot_up_bwd)
+
+
+@jax.custom_vjp
+def _edot_down(x, w):
+    """(S,E,C,F) x (E,F,D) -> (S,E,C,D); same shard-local weight-grad."""
+    return jnp.einsum("secf,efd->secd", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _edot_down_fwd(x, w):
+    return _edot_down(x, w), (x, w)
+
+
+def _edot_down_bwd(res, g):
+    x, w = res
+    dx = jnp.einsum("secd,efd->secf", g, w,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    dwp = jnp.einsum("secf,secd->sefd", x, g,
+                     preferred_element_type=jnp.float32)
+    return dx, jnp.sum(dwp, axis=0).astype(w.dtype)
+
+
+_edot_down.defvjp(_edot_down_fwd, _edot_down_bwd)
+
+
+def _expert_ffn(params, x, cfg: ModelConfig):
+    """Batched expert apply on (S, E, C, D) with (E, D, F) weights.
+
+    The hidden (S, E, C, F) is pinned to (data on S, model on F): left to
+    propagation, GSPMD S-shards it but REPLICATES F across the model axis,
+    replicating the expert GEMMs 16x (§Perf iteration 8)."""
+    with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "expert_ffn")):
+        up = shard(_edot_up(x, params["w_up"].astype(x.dtype)),
+                   "batch", "expert", None, "mlp")
+        if cfg.ffn in ("swiglu", "geglu"):
+            gate = shard(_edot_up(x, params["w_gate"].astype(x.dtype)),
+                         "batch", "expert", None, "mlp")
+            h = nn.swiglu(gate, up) if cfg.ffn == "swiglu" \
+                else nn.geglu(gate, up)
+        elif cfg.ffn == "gelu":
+            h = nn.gelu(up)
+        else:
+            h = nn.silu(up)
+        return _edot_down(h, params["w_down"].astype(x.dtype))
+
+
+def _batch_shards(batch: int) -> int:
+    """Active data-parallel shard count that divides the local batch dim.
+
+    Drives the *shard-local* dispatch: capacity, cumsum and scatter are
+    computed per data shard (leading reshape dim pinned to (pod, data)), so
+    the dispatch never communicates. The naive global formulation makes
+    GSPMD all-reduce the (E, C, D) buffer across the whole mesh every
+    layer (EXPERIMENTS.md §Perf iteration 6). Per-shard capacity is the
+    standard EP semantics on real systems (local buffers per device).
+    """
+    from repro.sharding import _ctx
+    ctx = _ctx()
+    if ctx is None:
+        return 1
+    sizes = dict(ctx["mesh"].shape)
+    n = sizes.get("pod", 1) * sizes.get("data", 1)
+    return n if n > 1 and batch % n == 0 else 1
+
+
+def moe_forward(params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Shard-local top-k dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_sh = _batch_shards(b)
+    t = b * s // n_sh                                     # tokens per shard
+    xs = x.reshape(n_sh, t, d)
+    xs = shard(xs, "batch", None, None)
+
+    logits = nn.linear(xs, params["router"].astype(x.dtype))
+    probs = nn.router_gate(logits)                        # (S, T, E) f32
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)       # (S, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    capacity = max(int(t * k / e * cfg.capacity_factor), 4)
+
+    with jax.named_scope(nn.scope_tag(OpGroup.MEMORY, "moe_dispatch")):
+        flat_ids = expert_ids.reshape(n_sh, t * k)        # per-shard stream
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (S, T*k, E)
+        pos_in_expert = (jnp.cumsum(onehot, axis=1) - onehot)  # exclusive
+        pos = jnp.take_along_axis(pos_in_expert, flat_ids[..., None],
+                                  axis=2)[..., 0]         # (S, T*k)
+        keep = pos < capacity
+        dest = jnp.where(keep, flat_ids * capacity + pos, e * capacity)
+        token_idx = jnp.repeat(jnp.arange(t), k)
+
+        def scatter_one(xi, di):
+            bufi = jnp.zeros((e * capacity + 1, d), x.dtype)
+            return bufi.at[di].set(xi[token_idx], mode="drop",
+                                   unique_indices=True)[:-1]
+
+        buf = jax.vmap(scatter_one)(xs, dest)             # (S, E*C, D)
+        buf = shard(buf.reshape(n_sh, e, capacity, d), "batch", "expert",
+                    None, None)
+
+    out_buf = _expert_ffn(params["experts"], buf, cfg)    # (S, E, C, D)
+
+    with jax.named_scope(nn.scope_tag(OpGroup.MEMORY, "moe_combine")):
+        flat_out = out_buf.reshape(n_sh, e * capacity, d)
+        safe = jnp.minimum(dest, e * capacity - 1)
+        gathered = jax.vmap(lambda o, i: jnp.take(o, i, axis=0))(
+            flat_out, safe)                               # (S, T*k, D)
+        gathered = jnp.where(keep[..., None], gathered, 0.0)
+        weighted = gathered * gate_vals.reshape(
+            n_sh, t * k)[..., None].astype(x.dtype)
+        y = jnp.sum(weighted.reshape(n_sh, t, k, d), axis=2)
+
+    if cfg.n_shared_experts:
+        y = nn.residual_add(y, ffn_forward(params["shared"], xs, cfg))
+
+    # Switch-style load-balance auxiliary loss (shard-local then averaged)
+    with jax.named_scope(nn.scope_tag(OpGroup.REDUCTION, "router_aux")):
+        me = jnp.mean(probs, axis=(0, 1))                 # (E,)
+        ce = jnp.mean(
+            jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=(0, 1, 2))
+        aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,161 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal mixer is: x -> [branch A: linear -> causal conv1d(w=4) -> RG-LRU]
+⊙ [branch B: linear -> GeLU] -> linear out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(c * softplus(Λ) * (-r_t))     in (0, 1), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over (a, b) pairs — a log-depth
+parallel scan of the linear recurrence (the TPU-native translation of the
+paper-lineage CUDA scan kernels). Decode carries (h, conv tail) state of
+fixed size, so long_500k is O(1) per token.
+
+Everything here is NonGEMM-dense: gates (Activation), the scan itself
+(Element-wise), conv via shifted adds (Memory/Elementwise).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.taxonomy import OpGroup
+from repro.models.common import ModelConfig, dense_init
+
+_C = 8.0
+
+
+def init_recurrent(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    pd = jnp.dtype(cfg.param_dtype)
+    # Λ init so that a = exp(-c*softplus(Λ)*r) spans useful timescales
+    lam = jax.random.uniform(ks[5], (w,), jnp.float32, 0.001, 0.1)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / _C))  # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype=pd),
+        "w_gate_branch": dense_init(ks[1], (d, w), dtype=pd),
+        "w_out": dense_init(ks[2], (w, d), dtype=pd),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), dtype=pd),
+        "conv_b": jnp.zeros((w,), pd),
+        "w_a": dense_init(ks[4], (w, w), dtype=pd),
+        "b_a": jnp.zeros((w,), pd),
+        "w_x": dense_init(ks[6], (w, w), dtype=pd),
+        "b_x": jnp.zeros((w,), pd),
+        "lam": lam.astype(pd),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """Depthwise causal conv: x (B,S,W), w (K,W) via K shifted adds."""
+    with jax.named_scope(nn.scope_tag(OpGroup.MEMORY, "causal_conv1d")):
+        k = w.shape[0]
+        out = x * w[-1].astype(x.dtype)
+        for i in range(1, k):
+            shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+            out = out + shifted * w[-1 - i].astype(x.dtype)
+        return out + b.astype(x.dtype)
+
+
+def _rglru_coeffs(params, x):
+    """Per-step (a, b) of the linear recurrence h = a*h + b. x: (..., W)."""
+    with jax.named_scope(nn.scope_tag(OpGroup.ACTIVATION, "rglru_gates")):
+        r = jax.nn.sigmoid(
+            nn.linear(x, params["w_a"].astype(x.dtype)).astype(jnp.float32)
+            + params["b_a"].astype(jnp.float32))
+        i = jax.nn.sigmoid(
+            nn.linear(x, params["w_x"].astype(x.dtype)).astype(jnp.float32)
+            + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(params, x):
+    """Parallel RG-LRU over (B, S, W) via associative scan."""
+    a, b = _rglru_coeffs(params, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    with jax.named_scope(nn.scope_tag(OpGroup.ELEMENTWISE, "rglru_scan")):
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(params, x_t, h_prev):
+    """Single decode step. x_t: (B, 1, W); h_prev: (B, W) f32."""
+    a, b = _rglru_coeffs(params, x_t)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(x_t.dtype)[:, None, :], h
+
+
+def recurrent_forward(params, x, cfg: ModelConfig):
+    """Full-sequence Griffin recurrent mixer. x: (B, S, D)."""
+    u = nn.linear(x, params["w_in"].astype(x.dtype))
+    g = nn.gelu(nn.linear(x, params["w_gate_branch"].astype(x.dtype)))
+    u = _causal_conv1d(u, params["conv_w"], params["conv_b"])
+    h = rglru_scan(params, u)
+    return nn.linear(h * g, params["w_out"].astype(x.dtype))
+
+
+def recurrent_prefill(params, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Full-sequence forward that also returns the decode state.
+
+    Cache layout matches :func:`init_recurrent_cache`: final RG-LRU hidden
+    state (f32) + the (conv_width - 1) tail of the conv input stream.
+    """
+    u = nn.linear(x, params["w_in"].astype(x.dtype))
+    g = nn.gelu(nn.linear(x, params["w_gate_branch"].astype(x.dtype)))
+    u_c = _causal_conv1d(u, params["conv_w"], params["conv_b"])
+    a, b = _rglru_coeffs(params, u_c)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    with jax.named_scope(nn.scope_tag(OpGroup.ELEMENTWISE, "rglru_scan")):
+        _, h_f32 = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h_f32.astype(x.dtype)
+    y = nn.linear(h * g, params["w_out"].astype(x.dtype))
+    kw = cfg.conv_width - 1
+    cache = {"h": h_f32[:, -1], "conv": u[:, -kw:].astype(cfg.activation_dtype)}
+    return y, cache
+
+
+def init_recurrent_cache(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w),
+                          cfg.activation_dtype),
+    }
+
+
+def recurrent_decode(params, x, cfg: ModelConfig, cache: dict,
+                     pos) -> Tuple[jax.Array, dict]:
+    """One-token Griffin step. x: (B, 1, D)."""
+    del pos
+    u = nn.linear(x, params["w_in"].astype(x.dtype))
+    g = nn.gelu(nn.linear(x, params["w_gate_branch"].astype(x.dtype)))
+    # conv over the (K-1)-tail + current input
+    window = jnp.concatenate([cache["conv"], u], axis=1)   # (B, K, W)
+    conv_w = params["conv_w"].astype(x.dtype)
+    u_c = jnp.einsum("bkw,kw->bw", window, conv_w)[:, None, :] \
+        + params["conv_b"].astype(x.dtype)
+    h_out, h_new = rglru_step(params, u_c, cache["h"])
+    y = nn.linear(h_out * g, params["w_out"].astype(x.dtype))
+    return y, {"h": h_new, "conv": window[:, 1:]}

@@ -1,0 +1,366 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM is implemented in the **chunkwise-parallel** form: the sequence is cut
+into chunks of ``cfg.mlstm_chunk``; within a chunk the stabilized quadratic
+(attention-like) form runs as einsums, and a (C, n, m) matrix-memory state is
+carried across chunks with ``lax.scan``. This is the TPU-native translation
+of the TFLA/mLSTM CUDA kernels: log-space gate cumulative sums + a running
+max stabilizer ``m`` keep exponential input gating finite. Decode is the
+plain recurrent step (O(1) state — why xlstm-350m runs long_500k).
+
+sLSTM has inherently sequential (block-diagonal) recurrence; training scans
+over time. Both are NonGEMM-heavy: gates (Activation), scans (Element-wise),
+normalizers (Normalization) — prime paper material.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.taxonomy import OpGroup
+from repro.models.common import ModelConfig, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = int(d * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    ks = jax.random.split(key, 10)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_up": dense_init(ks[0], (d, di), dtype=pd),
+        "w_z": dense_init(ks[1], (d, di), dtype=pd),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, di), dtype=pd),
+        "conv_b": jnp.zeros((di,), pd),
+        "w_q": dense_init(ks[3], (di, di), dtype=pd),
+        "w_k": dense_init(ks[4], (di, di), dtype=pd),
+        "w_v": dense_init(ks[5], (di, di), dtype=pd),
+        "w_i": dense_init(ks[6], (di, h), dtype=pd),
+        "b_i": jnp.zeros((h,), pd),
+        "w_f": dense_init(ks[7], (di, h), dtype=pd),
+        "b_f": jnp.full((h,), 3.0, pd),     # open forget gates at init
+        "out_norm": jnp.ones((di,), pd),
+        "w_down": dense_init(ks[8], (di, d), dtype=pd),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    with jax.named_scope(nn.scope_tag(OpGroup.MEMORY, "causal_conv1d")):
+        k = w.shape[0]
+        out = x * w[-1].astype(x.dtype)
+        for i in range(1, k):
+            shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+            out = out + shifted * w[-1 - i].astype(x.dtype)
+        return out + b.astype(x.dtype)
+
+
+def _mlstm_qkvif(params, x, cfg: ModelConfig):
+    """Shared pre-cell computation. x: (B, S, D) -> q,k,v (B,S,H,dh), i,f (B,S,H)."""
+    h = cfg.n_heads
+    up = nn.linear(x, params["w_up"].astype(x.dtype))
+    z = nn.linear(x, params["w_z"].astype(x.dtype))
+    c = nn.silu(_causal_conv1d(up, params["conv_w"], params["conv_b"]))
+    q = nn.split_heads(nn.linear(c, params["w_q"].astype(x.dtype)), h)
+    k = nn.split_heads(nn.linear(c, params["w_k"].astype(x.dtype)), h)
+    v = nn.split_heads(nn.linear(up, params["w_v"].astype(x.dtype)), h)
+    with jax.named_scope(nn.scope_tag(OpGroup.ACTIVATION, "mlstm_gates")):
+        i_raw = (nn.linear(up, params["w_i"].astype(x.dtype))
+                 .astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+        f_raw = (nn.linear(up, params["w_f"].astype(x.dtype))
+                 .astype(jnp.float32) + params["b_f"].astype(jnp.float32))
+        logf = jax.nn.log_sigmoid(f_raw)                  # (B, S, H)
+    dh = q.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(dh)).astype(k.dtype)
+    return q, k, v, i_raw, logf, z
+
+
+def mlstm_cell_chunked(q, k, v, i_raw, logf, chunk: int,
+                       state: Tuple = None):
+    """Chunkwise-parallel stabilized mLSTM cell.
+
+    q,k,v: (B,S,H,dh); i_raw/logf: (B,S,H). Returns (h_out, final_state)
+    with state = (C (B,H,dh,dh) f32, n (B,H,dh) f32, m (B,H) f32).
+    """
+    b, s, h, dh = q.shape
+    L = min(chunk, s)
+    nchunk = -(-s // L)
+    pad = nchunk * L - s
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(a):
+        return a.reshape(b, nchunk, L, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(i_raw), to_chunks(logf)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e9, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, ij, fj = xs                       # (B,L,H,*) / (B,L,H)
+        F = jnp.cumsum(fj, axis=1)                    # (B,L,H) inclusive
+        with jax.named_scope(nn.scope_tag(OpGroup.LOGIT, "mlstm_dmatrix")):
+            # D[b,h,i,j] = F_i - F_j + ĩ_j   for j <= i (intra-chunk)
+            Fi = F.transpose(0, 2, 1)                 # (B,H,L)
+            Dlog = Fi[:, :, :, None] - Fi[:, :, None, :] + \
+                ij.transpose(0, 2, 1)[:, :, None, :]
+            tri = jnp.tril(jnp.ones((L, L), bool))
+            Dlog = jnp.where(tri[None, None], Dlog, NEG_INF)
+            carry_log = Fi + m[:, :, None]            # (B,H,L)
+            m_new_i = jnp.maximum(jnp.max(Dlog, axis=-1), carry_log)
+            D = jnp.exp(Dlog - m_new_i[..., None])    # (B,H,L,L)
+            carry_w = jnp.exp(carry_log - m_new_i)    # (B,H,L)
+        with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "mlstm_intra")):
+            qf = qj.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B,H,L,dh)
+            kf = kj.transpose(0, 2, 1, 3).astype(jnp.float32)
+            vf = vj.transpose(0, 2, 1, 3).astype(jnp.float32)
+            scores = jnp.einsum("bhid,bhjd->bhij", qf, kf) * D
+            num_intra = jnp.einsum("bhij,bhjd->bhid", scores, vf)
+            den_intra = jnp.einsum("bhij,bhjd->bhid", D, kf)
+        with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "mlstm_inter")):
+            num_inter = jnp.einsum("bhid,bhde->bhie", qf, C) * \
+                carry_w[..., None]
+            den_inter = n[:, :, None, :] * carry_w[..., None]
+        num = num_intra + num_inter
+        den = jnp.einsum("bhid,bhid->bhi", qf, den_intra + den_inter)
+        with jax.named_scope(nn.scope_tag(OpGroup.NORMALIZATION,
+                                          "mlstm_normalizer")):
+            denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new_i))
+            h_out = num / denom[..., None]            # (B,H,L,dh)
+
+        # ---- state update to end of chunk ----
+        F_L = Fi[:, :, -1]                            # (B,H)
+        state_log = F_L[:, :, None] - Fi + ij.transpose(0, 2, 1)  # (B,H,L)
+        m_next = jnp.maximum(F_L + m, jnp.max(state_log, axis=-1))
+        w_src = jnp.exp(state_log - m_next[:, :, None])
+        w_old = jnp.exp(F_L + m - m_next)
+        C_next = C * w_old[:, :, None, None] + jnp.einsum(
+            "bhjd,bhje->bhde", kf * w_src[..., None], vf)
+        n_next = n * w_old[:, :, None] + jnp.sum(kf * w_src[..., None], 2)
+        return (C_next, n_next, m_next), h_out.transpose(0, 2, 1, 3)
+
+    (Cf, nf, mf), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    out = hs.swapaxes(0, 1).reshape(b, nchunk * L, h, dh)
+    if pad:
+        out = out[:, :s]
+    return out, (Cf, nf, mf)
+
+
+def mlstm_cell_step(q, k, v, i_raw, logf, state):
+    """Recurrent mLSTM step (decode + test oracle). q,k,v: (B,1,H,dh)."""
+    C, n, m = state
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    it = i_raw[:, 0]
+    ft = logf[:, 0]
+    m_new = jnp.maximum(ft + m, it)
+    fw = jnp.exp(ft + m - m_new)[..., None]
+    iw = jnp.exp(it - m_new)[..., None]
+    C_new = C * fw[..., None] + iw[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    n_new = n * fw + iw * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h[:, None], (C_new, n_new, m_new)
+
+
+def _mlstm_out(params, h_cell, z, x_dtype, cfg: ModelConfig):
+    del cfg
+    b, s, h, dh = h_cell.shape
+    flat = h_cell.reshape(b, s, h * dh).astype(x_dtype)
+    flat = nn.rms_norm(flat, params["out_norm"].astype(x_dtype))
+    gated = flat * nn.silu(z)
+    return nn.linear(gated, params["w_down"].astype(x_dtype))
+
+
+def mlstm_forward(params, x, cfg: ModelConfig):
+    q, k, v, i_raw, logf, z = _mlstm_qkvif(params, x, cfg)
+    h_cell, _ = mlstm_cell_chunked(q, k, v, i_raw, logf, cfg.mlstm_chunk)
+    return _mlstm_out(params, h_cell, z, x.dtype, cfg)
+
+
+def mlstm_prefill(params, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Chunked mLSTM forward that also returns the decode state."""
+    q, k, v, i_raw, logf, z = _mlstm_qkvif(params, x, cfg)
+    h_cell, (C, n, m) = mlstm_cell_chunked(q, k, v, i_raw, logf,
+                                           cfg.mlstm_chunk)
+    y = _mlstm_out(params, h_cell, z, x.dtype, cfg)
+    # conv tail over the *pre-conv* up-projection stream
+    up = nn.linear(x, params["w_up"].astype(x.dtype))
+    kw = cfg.conv_width - 1
+    cache = {"C": C, "n": n, "m": m,
+             "conv": up[:, -kw:].astype(cfg.activation_dtype)}
+    return y, cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    di = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e9, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di),
+                          cfg.activation_dtype),
+    }
+
+
+def mlstm_decode(params, x, cfg: ModelConfig, cache: dict, pos):
+    del pos
+    h = cfg.n_heads
+    up = nn.linear(x, params["w_up"].astype(x.dtype))
+    z = nn.linear(x, params["w_z"].astype(x.dtype))
+    window = jnp.concatenate([cache["conv"], up], axis=1)
+    conv_w = params["conv_w"].astype(x.dtype)
+    c = nn.silu(jnp.einsum("bkw,kw->bw", window, conv_w)[:, None]
+                + params["conv_b"].astype(x.dtype))
+    q = nn.split_heads(nn.linear(c, params["w_q"].astype(x.dtype)), h)
+    k = nn.split_heads(nn.linear(c, params["w_k"].astype(x.dtype)), h)
+    v = nn.split_heads(nn.linear(up, params["w_v"].astype(x.dtype)), h)
+    i_raw = (nn.linear(up, params["w_i"].astype(x.dtype)).astype(jnp.float32)
+             + params["b_i"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(
+        nn.linear(up, params["w_f"].astype(x.dtype)).astype(jnp.float32)
+        + params["b_f"].astype(jnp.float32))
+    dh = q.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(dh)).astype(k.dtype)
+    h_cell, (C, n, m) = mlstm_cell_step(q, k, v, i_raw, logf,
+                                        (cache["C"], cache["n"], cache["m"]))
+    y = _mlstm_out(params, h_cell.astype(x.dtype), z, x.dtype, cfg)
+    return y, {"C": C, "n": n, "m": m, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    d_ff = int(d * cfg.slstm_ff_factor)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype=pd),
+        "b_in": jnp.concatenate([
+            jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))
+        ]).astype(pd),                                 # open forget gates
+        "r": dense_init(ks[1], (h, dh, 4 * dh), in_axis=1, dtype=pd),
+        "out_norm": jnp.ones((d,), pd),
+        "ff_up": dense_init(ks[2], (d, 2 * d_ff), dtype=pd),
+        "ff_down": dense_init(ks[3], (d_ff, d), dtype=pd),
+    }
+
+
+def _slstm_step(params, x_t, state, cfg: ModelConfig):
+    """x_t: (B, D) pre-activation input proj already applied upstream? No:
+    x_t here is the raw (B, D) token feature; we project inside."""
+    c, n, m, h_prev = state                            # (B,H,dh) each
+    b, d = x_t.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    zx = nn.linear(x_t, params["w_in"].astype(x_t.dtype)) \
+        + params["b_in"].astype(x_t.dtype)
+    rh = jnp.einsum("bhd,hde->bhe", h_prev.astype(x_t.dtype),
+                    params["r"].astype(x_t.dtype))     # (B,H,4dh)
+    z_all = zx.reshape(b, nh, 4 * dh) + rh
+    i_raw, f_raw, z_raw, o_raw = jnp.split(
+        z_all.astype(jnp.float32), 4, axis=-1)         # (B,H,dh)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_w = jnp.exp(i_raw - m_new)
+    f_w = jnp.exp(logf + m - m_new)
+    c_new = f_w * c + i_w * jnp.tanh(z_raw)
+    n_new = f_w * n + i_w
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(params, x, cfg: ModelConfig):
+    """Sequential sLSTM over (B, S, D) + GeGLU FFN."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    zeros = jnp.zeros((b, nh, dh), jnp.float32)
+    state0 = (zeros, zeros, jnp.full((b, nh, dh), -1e9, jnp.float32), zeros)
+
+    def step(state, x_t):
+        new_state, h = _slstm_step(params, x_t, state, cfg)
+        return new_state, h
+
+    with jax.named_scope(nn.scope_tag(OpGroup.ELEMENTWISE, "slstm_scan")):
+        _, hs = jax.lax.scan(step, state0, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    h = nn.rms_norm(h, params["out_norm"].astype(x.dtype))
+    up = nn.linear(h, params["ff_up"].astype(x.dtype))
+    gate, val = jnp.split(up, 2, axis=-1)
+    return nn.linear(nn.geglu(gate, val), params["ff_down"].astype(x.dtype))
+
+
+def slstm_prefill(params, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Sequential sLSTM forward that also returns the decode state."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    zeros = jnp.zeros((b, nh, dh), jnp.float32)
+    state0 = (zeros, zeros, jnp.full((b, nh, dh), -1e9, jnp.float32), zeros)
+
+    def step(state, x_t):
+        new_state, h = _slstm_step(params, x_t, state, cfg)
+        return new_state, h
+
+    with jax.named_scope(nn.scope_tag(OpGroup.ELEMENTWISE, "slstm_scan")):
+        (c, n, m, hh), hs = jax.lax.scan(step, state0, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    h = nn.rms_norm(h, params["out_norm"].astype(x.dtype))
+    up = nn.linear(h, params["ff_up"].astype(x.dtype))
+    gate, val = jnp.split(up, 2, axis=-1)
+    y = nn.linear(nn.geglu(gate, val), params["ff_down"].astype(x.dtype))
+    return y, {"c": c, "n": n, "m": m, "h": hh}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, nh, dh), -1e9, jnp.float32),
+            "h": z}
+
+
+def slstm_decode(params, x, cfg: ModelConfig, cache: dict, pos):
+    del pos
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    new_state, h = _slstm_step(params, x[:, 0], state, cfg)
+    b, d = x.shape[0], x.shape[2]
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    h = nn.rms_norm(h, params["out_norm"].astype(x.dtype))
+    up = nn.linear(h, params["ff_up"].astype(x.dtype))
+    gate, val = jnp.split(up, 2, axis=-1)
+    y = nn.linear(nn.geglu(gate, val), params["ff_down"].astype(x.dtype))
+    c, n, m, hh = new_state
+    return y, {"c": c, "n": n, "m": m, "h": hh}

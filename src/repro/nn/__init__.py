@@ -1,0 +1,328 @@
+"""repro.nn — scope-tagged operator library.
+
+Every semantic operator used by the model zoo is defined here and wrapped in
+``jax.named_scope(scope_tag(group, name))``. The tag is what lets both
+profiling views (eager jaxpr interpreter, compiled HLO analyzer) attribute
+work to the paper's operator groups — the JAX analogue of the paper pointing
+torch.fx at ``nn.Module`` boundaries.
+
+A process-global backend switch selects the implementation:
+
+    "jnp"              pure jax.numpy (reference; used for dry-run/compile)
+    "pallas"           fused Pallas TPU kernels where available (real TPU)
+    "pallas_interpret" Pallas kernels in interpret mode (CPU correctness)
+
+Ops without a Pallas kernel always use the jnp path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.taxonomy import OpGroup, scope_tag
+
+_BACKEND = "jnp"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in ("jnp", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown nn backend {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _kernels():
+    from repro.kernels import ops as kops
+    return kops
+
+
+def tagged(group: OpGroup, name: str):
+    """Decorator: run the op body under its ``ng:`` named scope."""
+    tag = scope_tag(group, name)
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with jax.named_scope(tag):
+                return fn(*args, **kwargs)
+        wrapper.op_group = group
+        wrapper.op_tag = tag
+        return wrapper
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Normalization (paper group: Normalization)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.NORMALIZATION, "layer_norm")
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    if _BACKEND != "jnp":
+        return _kernels().layer_norm(x, scale, bias, eps=eps,
+                                     interpret=_BACKEND == "pallas_interpret")
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+@tagged(OpGroup.NORMALIZATION, "rms_norm")
+def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False):
+    if _BACKEND != "jnp":
+        return _kernels().rms_norm(x, scale, eps=eps,
+                                   zero_centered=zero_centered,
+                                   interpret=_BACKEND == "pallas_interpret")
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    s = scale.astype(jnp.float32)
+    y = y * (1.0 + s) if zero_centered else y * s
+    return y.astype(x.dtype)
+
+
+@tagged(OpGroup.NORMALIZATION, "fused_add_rms_norm")
+def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
+                       zero_centered: bool = False):
+    """residual += x; y = rms_norm(residual) — a single HBM pass on TPU."""
+    if _BACKEND != "jnp":
+        return _kernels().fused_add_rms_norm(
+            x, residual, scale, eps=eps, zero_centered=zero_centered,
+            interpret=_BACKEND == "pallas_interpret")
+    r = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(r, scale, eps=eps, zero_centered=zero_centered), r
+
+
+# ---------------------------------------------------------------------------
+# Activation (paper group: Activation)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.ACTIVATION, "relu")
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+@tagged(OpGroup.ACTIVATION, "gelu")
+def gelu(x, approximate: bool = True):
+    return jax.nn.gelu(x, approximate=approximate)
+
+
+@tagged(OpGroup.ACTIVATION, "silu")
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+@tagged(OpGroup.ACTIVATION, "swiglu")
+def swiglu(gate, up):
+    """SiLU(gate) * up — fused Activation + Elem-wise mul."""
+    if _BACKEND != "jnp":
+        return _kernels().swiglu(gate, up,
+                                 interpret=_BACKEND == "pallas_interpret")
+    return (gate * jax.nn.sigmoid(gate.astype(jnp.float32)).astype(gate.dtype)
+            ) * up
+
+
+@tagged(OpGroup.ACTIVATION, "geglu")
+def geglu(gate, up):
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+ACTIVATIONS = {"relu": relu, "gelu": gelu, "silu": silu}
+
+
+# ---------------------------------------------------------------------------
+# Logit computation (paper group: Logit Computation)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.LOGIT, "softmax")
+def softmax(x, axis: int = -1):
+    xf = x.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(xf, axis=axis, keepdims=True))
+    e = jnp.exp(xf - m)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+@tagged(OpGroup.LOGIT, "softmax_cross_entropy")
+def softmax_cross_entropy(logits, labels):
+    """Per-position CE. logits (..., V) f32-accumulated; labels (...) int."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    shifted = lf - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + jnp.squeeze(
+        jax.lax.stop_gradient(m), -1)
+    label_logit = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - label_logit
+
+
+@tagged(OpGroup.LOGIT, "router_gate")
+def router_gate(logits):
+    """MoE router probabilities (softmax over experts)."""
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Memory ops (paper group: Memory)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.MEMORY, "split_heads")
+def split_heads(x, n_heads: int):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+@tagged(OpGroup.MEMORY, "merge_heads")
+def merge_heads(x):
+    b, s, h, d = x.shape
+    return x.reshape(b, s, h * d)
+
+
+@tagged(OpGroup.MEMORY, "embedding_lookup")
+def embedding_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+@tagged(OpGroup.MEMORY, "kv_cache_update")
+def kv_cache_update(cache, new, index):
+    """Insert ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at ``index``."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                               index, axis=1)
+
+
+@tagged(OpGroup.MEMORY, "apply_rope")
+def apply_rope(x, positions, base: float = 10000.0, fraction: float = 1.0):
+    """Rotary embedding on (B, S, H, D); optionally on a leading fraction."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    theta = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    cos = jnp.cos(theta)[:, :, None, :]
+    sin = jnp.sin(theta)[:, :, None, :]
+    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1) \
+        if rot < d else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Element-wise arithmetic (paper group: Elem-wise Arithmetic)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.ELEMENTWISE, "residual_add")
+def residual_add(x, y):
+    return x + y
+
+
+@tagged(OpGroup.ELEMENTWISE, "scale")
+def scale(x, factor):
+    return x * factor
+
+
+# ---------------------------------------------------------------------------
+# GEMM sites (tagged so attribution is exact, not heuristic)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.GEMM, "linear")
+def linear(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+@tagged(OpGroup.GEMM, "einsum")
+def einsum(spec: str, *operands):
+    dt = operands[0].dtype
+    return jnp.einsum(spec, *operands,
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoI selection (paper group: RoI Selection) — TPU-adapted NMS
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.ROI, "nms")
+def nms(boxes, scores, iou_threshold: float = 0.5,
+        score_threshold: float = 0.0, max_outputs: Optional[int] = None):
+    """Non-maximum suppression with static shapes (TPU-idiomatic).
+
+    Returns a keep mask of shape (N,). Boxes are (N, 4) as (x1, y1, x2, y2).
+    Greedy NMS identical to torchvision semantics, expressed as a
+    ``fori_loop`` over score-sorted candidates with a vectorized IoU row
+    per step — no data-dependent shapes (DESIGN.md §3 hardware adaptation).
+    """
+    if _BACKEND != "jnp":
+        return _kernels().nms(boxes, scores, iou_threshold=iou_threshold,
+                              score_threshold=score_threshold,
+                              interpret=_BACKEND == "pallas_interpret")
+    n = boxes.shape[0]
+    order = jnp.argsort(-scores)
+    b = boxes[order]
+    s = scores[order]
+    x1, y1, x2, y2 = b[:, 0], b[:, 1], b[:, 2], b[:, 3]
+    area = jnp.maximum(x2 - x1, 0) * jnp.maximum(y2 - y1, 0)
+
+    ix1 = jnp.maximum(x1[:, None], x1[None, :])
+    iy1 = jnp.maximum(y1[:, None], y1[None, :])
+    ix2 = jnp.minimum(x2[:, None], x2[None, :])
+    iy2 = jnp.minimum(y2[:, None], y2[None, :])
+    inter = jnp.maximum(ix2 - ix1, 0) * jnp.maximum(iy2 - iy1, 0)
+    union = area[:, None] + area[None, :] - inter
+    iou = jnp.where(union > 0, inter / union, 0.0)
+
+    valid = s > score_threshold
+
+    def body(i, keep):
+        alive = keep[i] & valid[i]
+        suppress = (iou[i] > iou_threshold) & (jnp.arange(n) > i) & alive
+        return keep & ~suppress
+
+    keep_sorted = jax.lax.fori_loop(0, n, body, valid)
+    keep = jnp.zeros((n,), dtype=bool).at[order].set(keep_sorted)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Interpolation (paper group: Interpolation)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.INTERPOLATION, "interpolate_bilinear")
+def interpolate_bilinear(x, out_hw: Tuple[int, int]):
+    """Bilinear resize of NCHW, align_corners=False (torch default)."""
+    n, c, h, w = x.shape
+    oh, ow = out_hw
+    ys = (jnp.arange(oh) + 0.5) * (h / oh) - 0.5
+    xs = (jnp.arange(ow) + 0.5) * (w / ow) - 0.5
+    y0 = jnp.clip(jnp.floor(ys), 0, h - 1)
+    x0 = jnp.clip(jnp.floor(xs), 0, w - 1)
+    y1 = jnp.clip(y0 + 1, 0, h - 1)
+    x1 = jnp.clip(x0 + 1, 0, w - 1)
+    wy = jnp.clip(ys - y0, 0.0, 1.0)
+    wx = jnp.clip(xs - x0, 0.0, 1.0)
+    y0, y1, x0, x1 = (a.astype(jnp.int32) for a in (y0, y1, x0, x1))
+    top = x[:, :, y0][:, :, :, x0] * (1 - wx) + x[:, :, y0][:, :, :, x1] * wx
+    bot = x[:, :, y1][:, :, :, x0] * (1 - wx) + x[:, :, y1][:, :, :, x1] * wx
+    return top * (1 - wy[:, None]) + bot * wy[:, None]

@@ -1,0 +1,215 @@
+"""Training runtime: step builder + fault-tolerant loop.
+
+``make_train_step`` builds the pjit-able step (grad accumulation over
+microbatches, AdamW, sharding rules active during trace). ``Trainer`` owns
+the loop: async checkpoints, SIGTERM-graceful preemption, straggler
+watchdog, restart-exact resume (step-indexed data).
+
+Microbatch layout: when ``num_microbatches > 1`` the batch arrives as
+(n_micro, B_micro, S) with dim 1 sharded over (pod, data) — the scan over
+dim 0 then touches only device-local slices (no per-iteration regather);
+reshaping a batch-sharded (B, S) inside the step would instead put the
+sharded axis on the scan dim and all-gather every iteration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, make_batch
+from repro.models import lm_loss
+from repro.models.common import ModelConfig
+from repro.optim import OptState, OptimizerConfig, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def cast_params(params, dtype):
+    """bf16 working copy — cast *before* any FSDP all-gather (half the
+    gather bytes; grads flow back through the cast to the f32 master)."""
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dtype) if p.dtype == jnp.float32 and p.ndim >= 2
+        else p, params)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    mesh=None, num_microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        working = cast_params(params, cfg.activation_dtype)
+        return lm_loss(working, mb, cfg)
+
+    def train_step(state: TrainState, batch: dict):
+        with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard):
+            params = state.params
+            if num_microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                def micro(carry, mb):
+                    gacc, lacc = carry
+                    (loss, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    gacc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                    return (gacc, lacc + loss), m
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss_sum), ms = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), jnp.float32)), batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / num_microbatches, grads)
+                loss = loss_sum / num_microbatches
+                metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+
+            new_params, new_opt, om = adamw_update(grads, state.opt, params,
+                                                   opt_cfg)
+            out = {"loss": loss, **metrics, **om}
+        return TrainState(new_params, new_opt), out
+
+    return train_step
+
+
+def microbatch_split(batch: dict, num_microbatches: int) -> dict:
+    """(B, ...) -> (n_micro, B/n_micro, ...) on the host (see module doc)."""
+    if num_microbatches == 1:
+        return batch
+
+    def sp(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches,
+                         *x.shape[1:])
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def pick_microbatches(cfg: ModelConfig, seq_len: int, per_device_batch: int,
+                      budget_bytes: float = 4e9) -> int:
+    """Largest power-of-two split keeping scanned residual stashes under
+    ``budget_bytes`` per device: n_layers x (B_mb x S x D) x 2 bytes."""
+    per_layer = seq_len * cfg.d_model * 2.0
+    total = cfg.n_layers * per_device_batch * per_layer
+    n = 1
+    while total / n > budget_bytes and n < max(per_device_batch, 1):
+        n *= 2
+    return min(n, max(per_device_batch, 1))
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps whose wall time is a z-score outlier vs recent history.
+
+    On a real cluster this triggers the controller's slow-host replacement;
+    here it is the detection half: counts and logs anomalies.
+    """
+    window: int = 50
+    z_threshold: float = 4.0
+    times: list = dataclasses.field(default_factory=list)
+    flagged: int = 0
+
+    def observe(self, seconds: float) -> bool:
+        hist = self.times[-self.window:]
+        is_straggler = False
+        if len(hist) >= 10:
+            mu = float(np.mean(hist))
+            sd = float(np.std(hist)) + 1e-9
+            if (seconds - mu) / sd > self.z_threshold:
+                self.flagged += 1
+                is_straggler = True
+        self.times.append(seconds)
+        return is_straggler
+
+
+class Trainer:
+    """Owns the loop: data, step, checkpoints, preemption, watchdog."""
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                 data_cfg: DataConfig, init_params_fn: Callable,
+                 mesh=None, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 100, num_microbatches: int = 1,
+                 log_every: int = 10, log_fn: Callable = print):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.mesh = mesh
+        self.num_microbatches = num_microbatches
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.log = log_fn
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.watchdog = StragglerWatchdog()
+        self._preempted = False
+        self._old_handler = None
+
+        params = init_params_fn()
+        self.state = TrainState(params, init_opt_state(params, opt_cfg))
+        self.step = 0
+        self._train_step = jax.jit(
+            make_train_step(cfg, opt_cfg, mesh, num_microbatches),
+            donate_argnums=(0,))
+
+    # -- preemption -------------------------------------------------------
+    def _on_sigterm(self, signum, frame):
+        self._preempted = True
+
+    def install_preemption_handler(self):
+        self._old_handler = signal.signal(signal.SIGTERM, self._on_sigterm)
+
+    # -- resume -----------------------------------------------------------
+    def try_resume(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        self.state, self.step = self.ckpt.restore(self.state)
+        self.log(f"[resume] restored step {self.step} "
+                 f"from {self.ckpt.directory}")
+        return True
+
+    # -- loop ---------------------------------------------------------------
+    def _next_batch(self):
+        batch = make_batch(self.data_cfg, self.step)
+        return microbatch_split(batch, self.num_microbatches)
+
+    def train(self, total_steps: int) -> dict:
+        history = []
+        while self.step < total_steps and not self._preempted:
+            batch = self._next_batch()
+            t0 = time.perf_counter()
+            self.state, metrics = self._train_step(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if self.watchdog.observe(dt):
+                self.log(f"[watchdog] step {self.step} straggler: {dt:.3f}s")
+            self.step += 1
+            if self.step % self.log_every == 0:
+                loss = float(metrics["loss"])
+                history.append((self.step, loss))
+                self.log(f"step {self.step:>6d}  loss {loss:.4f}  "
+                         f"lr {float(metrics['lr']):.2e}  {dt*1e3:.1f}ms")
+            if self.ckpt and self.step % self.ckpt_every == 0:
+                self.ckpt.save(self.step, self.state)
+        if self.ckpt and (self._preempted or self.step == total_steps):
+            self.ckpt.save(self.step, self.state, async_=False)
+            if self._preempted:
+                self.log(f"[preempt] final checkpoint at step {self.step}")
+        if self.ckpt:
+            self.ckpt.wait()
+        return {"history": history, "stragglers": self.watchdog.flagged,
+                "preempted": self._preempted, "step": self.step}

@@ -1,0 +1,286 @@
+"""Logical-axis sharding rules -> PartitionSpec (DP/TP/FSDP/EP/SP + pod).
+
+Mesh axes (launch/mesh.py):
+
+    single pod   (data=16, model=16)
+    multi-pod    (pod=2, data=16, model=16)
+
+Logical axes used by params/activations/caches:
+
+    batch     -> (pod, data)       data parallelism (hierarchical across pods)
+    embed     -> (data,) iff FSDP  ZeRO-3-style parameter sharding
+    vocab     -> (model,)          TP over the vocabulary (embed/head/logits)
+    heads     -> (model,)          TP over attention heads
+    kv_heads  -> (model,)          TP over KV heads
+    mlp       -> (model,)          TP over the FFN hidden dim
+    expert    -> (model,)          expert parallelism (MoE)
+    seq       -> ()                sequence dim of activations (unsharded)
+    kv_seq    -> context-dependent sequence-parallel KV cache (long decode)
+
+Spec building is *greedy and shape-aware*: each logical axis contributes its
+mesh axes left-to-right, skipping any mesh axis that (a) is absent from the
+mesh, (b) was already consumed by an earlier dim of the same array, or
+(c) does not divide the dim extent. This one rule resolves every awkward
+case in the assigned zoo mechanically — e.g. 60 experts with model=16 fall
+back to TP-within-expert on the mlp dim, and kv_heads=8 < model=16 falls
+back to sequence-sharding the KV cache (see ``kv_cache_spec``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _ctx() -> Optional[dict]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], fsdp: bool = False,
+              seq_shard: bool = False):
+    """Activate sharding for model-internal ``shard()`` constraints.
+
+    ``seq_shard``: Megatron-SP — the residual stream between blocks is
+    sharded over the model axis on the sequence dim, turning the two
+    per-block all-reduces into reduce-scatter+all-gather pairs and
+    sharding all Norm/Elem-wise work 1/TP (see EXPERIMENTS.md §Perf).
+    """
+    prev = _ctx()
+    _STATE.ctx = ({"mesh": mesh, "fsdp": fsdp, "seq_shard": seq_shard}
+                  if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def logical_map(fsdp: bool, seq_shard: bool = False) -> dict:
+    return {
+        "batch": ("pod", "data"),
+        "embed": ("data",) if fsdp else (),
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "expert": ("model",),
+        "seq": ("model",) if seq_shard else (),
+        "kv_seq": ("model",),
+        None: (),
+    }
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]],
+             mesh: Mesh, fsdp: bool = False, seq_shard: bool = False) -> P:
+    """Greedy shape-aware PartitionSpec (see module docstring)."""
+    lm = logical_map(fsdp, seq_shard)
+    mesh_sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        axes = []
+        extent = int(dim)
+        for ax in lm.get(name, ()):
+            size = mesh_sizes.get(ax)
+            if size is None or ax in used or size <= 1:
+                continue
+            if extent % size != 0:
+                continue
+            axes.append(ax)
+            used.add(ax)
+            extent //= size
+        if not axes:
+            entries.append(None)
+        elif len(axes) == 1:
+            entries.append(axes[0])
+        else:
+            entries.append(tuple(axes))
+    return P(*entries)
+
+
+def shard(x, *names):
+    """with_sharding_constraint under the active rules (no-op outside)."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    spec = spec_for(x.shape, names, mesh, ctx["fsdp"],
+                    ctx.get("seq_shard", False))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter tree -> sharding tree
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES_2D = {
+    # name -> logical names per dim
+    "embed": ("vocab", "embed"),
+    "pos": (None, "embed"),
+    "head": ("embed", "vocab"),
+    "wq": ("embed", "heads"),
+    "w_q": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+    "w_dkv": ("embed", None),
+    "w_kr": ("embed", None),
+    "w_up": ("embed", "mlp"),
+    "w_gate": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    "w_z": ("embed", "mlp"),
+    "w_in": ("embed", "mlp"),
+    "w_gate_branch": ("embed", "mlp"),
+    "w_out": ("mlp", "embed"),
+    "w_a": ("mlp", None),
+    "w_x": ("mlp", None),
+    "w_i": ("mlp", None),
+    "w_f": ("mlp", None),
+    "w_k": ("mlp", "mlp2"),
+    "w_v": ("mlp", "mlp2"),
+    "router": ("embed", None),
+    "ff_up": ("embed", "mlp"),
+    "ff_down": ("mlp", "embed"),
+    "conv_w": (None, "mlp"),
+    "r": ("heads", None, None),
+}
+
+_PARAM_RULES_1D = {
+    "bq": ("heads",),
+    "bk": ("kv_heads",),
+    "bv": ("kv_heads",),
+    "b_up": ("mlp",),
+    "conv_b": ("mlp",),
+    "b_a": ("mlp",),
+    "b_x": ("mlp",),
+    "lam": ("mlp",),
+    "out_norm": ("mlp",),
+}
+
+_EXPERT_RULES = {
+    # under an "experts" subtree, arrays get a leading E dim
+    "w_up": ("expert", "embed", "mlp"),
+    "w_gate": ("expert", "embed", "mlp"),
+    "w_down": ("expert", "mlp", "embed"),
+    "b_up": ("expert", "mlp"),
+    "b_down": ("expert", None),
+}
+
+# mlstm w_q/w_k/w_v are (di, di): shard output dim over model
+_PARAM_RULES_2D["w_k"] = (None, "mlp")
+_PARAM_RULES_2D["w_v"] = (None, "mlp")
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def logical_axes_for_param(path, shape) -> Tuple[Optional[str], ...]:
+    names = _path_names(path)
+    leaf = names[-1] if names else ""
+    under_experts = "experts" in names
+    ndim = len(shape)
+    if under_experts and leaf in _EXPERT_RULES:
+        rule = _EXPERT_RULES[leaf]
+        return rule[:ndim]
+    if ndim == 1:
+        return _PARAM_RULES_1D.get(leaf, (None,))
+    rule = _PARAM_RULES_2D.get(leaf)
+    if rule is None:
+        return (None,) * ndim
+    if ndim == len(rule):
+        return rule
+    if ndim == len(rule) + 1:
+        # stacked by lax.scan: leading layer dim is never sharded
+        return (None, *rule)
+    if ndim == len(rule) + 2:
+        return (None, None, *rule)
+    return (None,) * ndim
+
+
+def param_sharding(params, mesh: Mesh, fsdp: bool = False):
+    """Same-structure tree of NamedSharding for a params/opt-state pytree."""
+    def one(path, leaf):
+        names = logical_axes_for_param(path, leaf.shape)
+        # "mlp2" is a second independent TP dim that must not reuse "model";
+        # spec_for's used-set handles it because we map it to ("model",) too.
+        names = tuple("mlp" if n == "mlp2" else n for n in names)
+        return NamedSharding(mesh, spec_for(leaf.shape, names, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_sharding(shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+    """Token batches (B, S) or embedding batches (B, S, D)."""
+    names = ("batch", "seq", None)[: len(shape)]
+    return NamedSharding(mesh, spec_for(shape, names, mesh))
+
+
+def kv_cache_spec(shape: Sequence[int], mesh: Mesh) -> P:
+    """Decode-cache spec: batch over (pod,data); heads over model when they
+    divide, otherwise sequence-parallel KV (seq over model). Leftover batch
+    axes spill onto seq for batch=1 long-context decode."""
+    mesh_sizes = dict(mesh.shape)
+    used: set = set()
+    entries = [None] * len(shape)
+
+    def take(dim_idx: int, axes) -> None:
+        extent = int(shape[dim_idx])
+        got = []
+        for ax in axes:
+            size = mesh_sizes.get(ax)
+            if size is None or ax in used or size <= 1:
+                continue
+            if extent % size != 0:
+                continue
+            got.append(ax)
+            used.add(ax)
+            extent //= size
+        if got:
+            entries[dim_idx] = got[0] if len(got) == 1 else tuple(got)
+
+    if len(shape) == 4:            # (B, S, H_kv, Dh) attention KV
+        take(0, ("pod", "data"))
+        take(2, ("model",))
+        take(1, ("model", "pod", "data"))   # whatever is left
+    elif len(shape) == 3:          # (B, S, R) MLA latent / (B, K, W) conv
+        take(0, ("pod", "data"))
+        take(1, ("model", "pod", "data"))
+    elif len(shape) >= 1:
+        take(0, ("pod", "data"))
+    return P(*entries)
+
+
+def cache_sharding(caches, mesh: Mesh):
+    """Sharding tree for a decode cache pytree (shape-dispatch per leaf)."""
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        # stacked scan caches carry a leading (n_rep,) layer dim
+        stacked = "scan" in names
+        if stacked and len(shape) >= 1:
+            inner = kv_cache_spec(shape[1:], mesh)
+            return NamedSharding(mesh, P(None, *inner))
+        return NamedSharding(mesh, kv_cache_spec(shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

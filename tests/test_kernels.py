@@ -1,0 +1,133 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+
+
+def _tol(dt):
+    return ATOL[dt]
+
+
+def _rand(key, shape, dt):
+    return jax.random.normal(key, shape, jnp.float32).astype(dt)
+
+
+SHAPES_ND = [(4, 128), (2, 33, 257), (1, 7, 3, 64), (5, 1024)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_ND)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_rms_norm_sweep(shape, dt, rng):
+    x = _rand(rng, shape, dt)
+    w = _rand(jax.random.PRNGKey(1), (shape[-1],), dt)
+    got = ops.rms_norm(x, w, interpret=True)
+    want = ref.rms_norm(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("zero_centered", [False, True])
+def test_rms_norm_zero_centered(zero_centered, rng):
+    x = _rand(rng, (4, 96), jnp.float32)
+    w = _rand(jax.random.PRNGKey(1), (96,), jnp.float32)
+    got = ops.rms_norm(x, w, zero_centered=zero_centered, interpret=True)
+    want = ref.rms_norm(x, w, zero_centered=zero_centered)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES_ND[:3])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_layer_norm_sweep(shape, dt, rng):
+    x = _rand(rng, shape, dt)
+    w = _rand(jax.random.PRNGKey(1), (shape[-1],), dt)
+    b = _rand(jax.random.PRNGKey(2), (shape[-1],), dt)
+    got = ops.layer_norm(x, w, b, interpret=True)
+    want = ref.layer_norm(x, w, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_fused_add_rms_norm(dt, rng):
+    x = _rand(rng, (3, 17, 128), dt)
+    r = _rand(jax.random.PRNGKey(1), (3, 17, 128), dt)
+    w = _rand(jax.random.PRNGKey(2), (128,), dt)
+    gy, gr = ops.fused_add_rms_norm(x, r, w, interpret=True)
+    wy, wr = ref.fused_add_rms_norm(x, r, w)
+    np.testing.assert_allclose(np.asarray(gy, np.float32),
+                               np.asarray(wy, np.float32), atol=_tol(dt))
+    np.testing.assert_allclose(np.asarray(gr, np.float32),
+                               np.asarray(wr, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("shape", [(2, 60, 130), (1, 512), (3, 3, 3, 257)])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_swiglu_sweep(shape, dt, rng):
+    g = _rand(rng, shape, dt)
+    u = _rand(jax.random.PRNGKey(1), shape, dt)
+    got = ops.swiglu(g, u, interpret=True)
+    want = ref.swiglu(g, u)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 4), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16),
+                                           (False, None)])
+def test_flash_attention_sweep(hq, hkv, causal, window, rng):
+    ks = jax.random.split(rng, 3)
+    q = _rand(ks[0], (2, 67, hq, 32), jnp.float32)
+    k = _rand(ks[1], (2, 67, hkv, 32), jnp.float32)
+    v = _rand(ks[2], (2, 67, hkv, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_bf16(rng):
+    ks = jax.random.split(rng, 3)
+    q = _rand(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = _rand(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+    v = _rand(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=5e-2)
+
+
+@pytest.mark.parametrize("r,v,bv", [(7, 1000, 256), (32, 50304, 2048),
+                                    (3, 130, 64)])
+def test_softmax_xent_sweep(r, v, bv, rng):
+    logits = _rand(rng, (r, v), jnp.float32) * 5
+    labels = jax.random.randint(jax.random.PRNGKey(1), (r,), 0, v)
+    got = ops.softmax_xent(logits, labels, block_vocab=bv, interpret=True)
+    want = ref.softmax_xent(logits, labels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [37, 300, 1000])
+def test_nms_sweep(n, rng):
+    ks = jax.random.split(rng, 3)
+    centers = jax.random.uniform(ks[0], (n, 2)) * 60
+    wh = jax.random.uniform(ks[1], (n, 2)) * 12 + 1
+    boxes = jnp.concatenate([centers - wh / 2, centers + wh / 2], -1)
+    scores = jax.random.uniform(ks[2], (n,))
+    got = ops.nms(boxes, scores, iou_threshold=0.5, interpret=True)
+    want = ref.nms(boxes, scores, iou_threshold=0.5)
+    assert bool(jnp.all(got == want))
+
+
+def test_nms_score_threshold(rng):
+    boxes = jnp.asarray([[0, 0, 10, 10], [100, 100, 110, 110]], jnp.float32)
+    scores = jnp.asarray([0.9, 0.01])
+    keep = ops.nms(boxes, scores, score_threshold=0.5, interpret=True)
+    assert bool(keep[0]) and not bool(keep[1])

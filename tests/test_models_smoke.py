@@ -1,0 +1,175 @@
+"""Per-arch smoke tests (assignment deliverable f): every assigned
+architecture instantiates a REDUCED same-family config and runs one
+forward + one train step on CPU, asserting shapes and finiteness. The
+analytic param-count formulas are also pinned against the real trees."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_IDS, get_config, reduced
+from repro.data import DataConfig, make_batch
+from repro.models import (count_params, init_lm, init_lm_cache, lm_decode,
+                          lm_forward, lm_loss, lm_prefill)
+from repro.optim import OptimizerConfig, adamw_update, init_opt_state
+
+ALL = ARCH_IDS + PAPER_IDS
+
+
+def _inputs(cfg, b, s, key):
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    b, s = 2, 32
+    inputs = _inputs(cfg, b, s, key)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+
+    logits = jax.jit(lambda p, x: lm_forward(p, x, cfg))(params, inputs)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+    def loss_fn(p):
+        return lm_loss(p, {"inputs": inputs, "labels": labels}, cfg)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    opt_cfg = OptimizerConfig(total_steps=10)
+    state = init_opt_state(params, opt_cfg)
+    new_params, _, metrics = adamw_update(grads, state, params, opt_cfg)
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b_.astype(jnp.float32)))) > 0
+        for a, b_ in zip(jax.tree_util.tree_leaves(params),
+                         jax.tree_util.tree_leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL
+                                  if get_config(a).causal])
+def test_smoke_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    b, s = 2, 16
+    inputs = _inputs(cfg, b, s, key)
+    last, caches = jax.jit(
+        lambda p, x: lm_prefill(p, x, cfg, max_len=s + 4))(params, inputs)
+    assert last.shape == (b, cfg.vocab_size)
+    tok = (jnp.argmax(last, -1).astype(jnp.int32)
+           if cfg.input_mode == "tokens"
+           else jax.random.normal(key, (b, cfg.d_model), jnp.float32))
+    step_logits, caches = jax.jit(
+        lambda p, t, c: lm_decode(p, t, jnp.int32(s), c, cfg))(
+        params, tok, caches)
+    assert step_logits.shape == (b, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(step_logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_analytic_matches_actual(arch):
+    cfg = reduced(get_config(arch))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    actual = count_params(params)
+    analytic = cfg.n_params()
+    assert actual == analytic, (arch, actual, analytic)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "gemma3-27b",
+                                  "recurrentgemma-2b", "xlstm-350m",
+                                  "deepseek-v2-lite-16b"])
+def test_decode_matches_forward_end_to_end(arch):
+    """Model-level KV/state-cache invariant: greedy decode logits equal the
+    full-forward logits at the same position."""
+    cfg = reduced(get_config(arch)).replace(dtype="float32",
+                                            param_dtype="float32")
+    if cfg.is_moe:
+        # capacity drops are position-dependent (a token competing with a
+        # full prompt may drop; alone at decode it never does) — this test
+        # checks cache consistency, so make capacity non-binding
+        cfg = cfg.replace(capacity_factor=16.0)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    b, s = 1, 12
+    tokens = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    full = lm_forward(params, tokens, cfg)
+    _, caches = lm_prefill(params, tokens[:, :s], cfg, max_len=s + 2)
+    step_logits, _ = lm_decode(params, tokens[:, s], jnp.int32(s), caches,
+                               cfg)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full[:, s]), atol=2e-3, rtol=2e-3)
+
+
+def test_full_configs_match_assignment():
+    """Pin the published dims (the exact assigned table)."""
+    expect = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == \
+            (L, d, h, kv), arch
+        assert c.vocab_size == v, arch
+        if arch == "qwen2-moe-a2.7b":
+            assert c.moe_d_ff == ff
+        else:
+            assert c.d_ff == ff, arch
+    moe = get_config("qwen2-moe-a2.7b")
+    assert (moe.n_experts, moe.top_k) == (60, 4)
+    ds = get_config("deepseek-v2-lite-16b")
+    assert (ds.n_experts, ds.top_k, ds.kv_lora_rank) == (64, 6, 512)
+    assert ds.mla
+
+
+def test_gemma3_pattern_five_to_one():
+    cfg = get_config("gemma3-27b")
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == 62
+    assert kinds[:6] == ("local",) * 5 + ("attn",)
+    assert sum(1 for k in kinds if k == "attn") == 10
+
+
+def test_musicgen_embeddings_frontend(rng):
+    """Audio-backbone stub: (B, S, D) frame embeddings in, logits out."""
+    cfg = reduced(get_config("musicgen-large"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model))
+    logits = lm_forward(params, x, cfg)
+    assert logits.shape == (2, 8, cfg.vocab_size)
+    assert "head" in params  # untied head exists for the embedding frontend
+
+
+def test_encoder_only_has_no_decode():
+    from repro.models.common import SHAPES, shape_applicable
+    bert = get_config("bert-base")
+    assert not shape_applicable(bert, SHAPES["decode_32k"])
+    assert shape_applicable(bert, SHAPES["train_4k"])
+
+
+def test_long_context_gating():
+    from repro.models.common import SHAPES, shape_applicable
+    assert shape_applicable(get_config("recurrentgemma-2b"),
+                            SHAPES["long_500k"])
+    assert shape_applicable(get_config("xlstm-350m"), SHAPES["long_500k"])
+    assert shape_applicable(get_config("gemma3-27b"), SHAPES["long_500k"])
+    assert not shape_applicable(get_config("qwen1.5-110b"),
+                                SHAPES["long_500k"])

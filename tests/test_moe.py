@@ -1,0 +1,96 @@
+"""MoE dispatch invariants (unit + hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import nn
+from repro.models import moe as M
+from repro.models.common import ModelConfig
+
+
+def mkcfg(e=8, k=2, shared=1, cf=1.25):
+    return ModelConfig(name="t", n_layers=1, d_model=16, n_heads=2,
+                       n_kv_heads=2, d_ff=32, vocab_size=64,
+                       n_experts=e, top_k=k, n_shared_experts=shared,
+                       moe_d_ff=32, capacity_factor=cf, dtype="float32",
+                       param_dtype="float32", ffn="swiglu", remat=False)
+
+
+def test_moe_forward_shapes_and_finite(rng):
+    cfg = mkcfg()
+    p = M.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(rng, (2, 12, 16))
+    y, aux = M.moe_forward(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(aux))
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_matches_dense_when_experts_identical(rng):
+    """With all experts identical and no shared expert, MoE(x) must equal
+    the dense FFN with the same weights (gates renormalize to 1, capacity
+    generous so nothing drops)."""
+    cfg = mkcfg(e=4, k=2, shared=0, cf=8.0)
+    p = M.init_moe(jax.random.PRNGKey(1), cfg)
+    one = jax.tree_util.tree_map(lambda w: w[0:1], p["experts"])
+    p = dict(p)
+    p["experts"] = jax.tree_util.tree_map(
+        lambda w: jnp.repeat(w[0:1], cfg.n_experts, 0), p["experts"])
+    x = jax.random.normal(rng, (2, 8, 16))
+    y, _ = M.moe_forward(p, x, cfg)
+    dense_p = jax.tree_util.tree_map(lambda w: w[0], one)
+    want = M.ffn_forward(dense_p, x.reshape(16, 16), cfg).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity_factor tiny, overflow tokens contribute ~zero (only
+    the shared expert, if any)."""
+    cfg = mkcfg(e=2, k=1, shared=0, cf=0.01)
+    p = M.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(rng, (1, 64, 16))
+    y, _ = M.moe_forward(p, x, cfg)
+    # capacity = max(64*1/2*0.01, 4) = 4 per expert -> at most 8 tokens kept
+    nonzero = jnp.sum(jnp.any(jnp.abs(y[0]) > 1e-9, axis=-1))
+    assert int(nonzero) <= 8
+
+
+def test_router_gate_normalized(rng):
+    logits = jax.random.normal(rng, (10, 8)) * 3
+    probs = nn.router_gate(logits)
+    np.testing.assert_allclose(np.asarray(jnp.sum(probs, -1)),
+                               np.ones(10), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(2, 40), e=st.integers(2, 12), k=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_dispatch_position_property(t, e, k, seed):
+    """Property: the cumulative-sum dispatch assigns each (token, choice)
+    a unique (expert, slot) with slot < count of earlier same-expert
+    choices; kept tokens never collide."""
+    k = min(k, e)
+    key = jax.random.PRNGKey(seed)
+    flat_ids = jax.random.randint(key, (t * k,), 0, e)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_in_expert, flat_ids[:, None], 1)[:, 0]
+    pairs = list(zip(np.asarray(flat_ids).tolist(), np.asarray(pos).tolist()))
+    assert len(set(pairs)) == len(pairs), "slot collision"
+    # slots per expert are dense 0..n_e-1
+    for ex in range(e):
+        slots = sorted(s for i, s in pairs if i == ex)
+        assert slots == list(range(len(slots)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), cf=st.floats(0.5, 4.0))
+def test_moe_output_finite_property(seed, cf):
+    cfg = mkcfg(e=4, k=2, shared=1, cf=cf)
+    p = M.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 16, 16))
+    y, aux = M.moe_forward(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.isfinite(aux))

@@ -1,0 +1,97 @@
+"""Optimizer tests: AdamW behavior, clipping, schedule, int8
+error-feedback compression (hypothesis property)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (OptimizerConfig, adamw_update, apply_error_feedback,
+                         clip_by_global_norm, compress_decompress,
+                         cosine_schedule, dequantize_int8, global_norm,
+                         init_opt_state, quantize_int8)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptimizerConfig(peak_lr=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0, grad_clip=1e9)
+    target = jnp.asarray([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2))}
+    state = init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": params["w"] - target}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = OptimizerConfig(peak_lr=0.1, warmup_steps=0, weight_decay=0.5)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = init_opt_state(params, cfg)
+    grads = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    new, _, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(new["w"])) < 1.0     # decayed
+    np.testing.assert_allclose(np.asarray(new["b"]), 1.0)  # not decayed
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the limit: unchanged
+    g2 = {"a": jnp.full((4,), 0.1)}
+    same, _ = clip_by_global_norm(g2, 10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.1)
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                          end_lr_frac=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in
+           (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert lrs[4] == pytest.approx(1e-4, rel=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), scale=st.floats(1e-3, 1e3))
+def test_int8_quantization_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_recovers_signal():
+    """Constant gradient streamed through compress+feedback: the running
+    decompressed sum must converge to the true sum (error does not grow)."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 1e-2
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        g_hat, err = compress_decompress(g, err)
+        total = total + g_hat
+    np.testing.assert_allclose(np.asarray(total), np.asarray(50 * g),
+                               rtol=0.02, atol=1e-3)
+
+
+def test_compressed_adamw_roughly_tracks_uncompressed():
+    cfg_c = OptimizerConfig(peak_lr=0.05, warmup_steps=0, weight_decay=0.0,
+                            compress_grads=True)
+    cfg_u = OptimizerConfig(peak_lr=0.05, warmup_steps=0, weight_decay=0.0)
+    target = jnp.asarray([[0.7, -1.2]])
+    pc = {"w": jnp.zeros((1, 2))}
+    pu = {"w": jnp.zeros((1, 2))}
+    sc = init_opt_state(pc, cfg_c)
+    su = init_opt_state(pu, cfg_u)
+    for _ in range(150):
+        pc, sc, _ = adamw_update({"w": pc["w"] - target}, sc, pc, cfg_c)
+        pu, su, _ = adamw_update({"w": pu["w"] - target}, su, pu, cfg_u)
+    np.testing.assert_allclose(np.asarray(pc["w"]), np.asarray(pu["w"]),
+                               atol=0.05)

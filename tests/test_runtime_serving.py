@@ -1,0 +1,154 @@
+"""Runtime (fault-tolerant loop) + serving engine integration tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checksum
+from repro.configs import get_config, reduced
+from repro.data import DataConfig
+from repro.models import init_lm, lm_forward
+from repro.optim import OptimizerConfig
+from repro.runtime import (StragglerWatchdog, Trainer, microbatch_split,
+                           pick_microbatches)
+from repro.serving import Engine
+
+
+def tiny_cfg():
+    return reduced(get_config("granite-3-8b")).replace(
+        n_layers=2, loss_chunk=0)
+
+
+def mk_trainer(tmp, cfg, micro=1, seed=0, total=60):
+    # the data stream seed stays fixed: resume-exactness is about the
+    # *framework*, and a restored job must see the same token stream
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4, seed=0)
+    opt_cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=5,
+                              total_steps=total)
+    return Trainer(cfg, opt_cfg, data_cfg,
+                   init_params_fn=lambda: init_lm(jax.random.PRNGKey(seed),
+                                                  cfg),
+                   ckpt_dir=tmp, ckpt_every=10, num_microbatches=micro,
+                   log_every=100, log_fn=lambda *a: None)
+
+
+def test_training_reduces_loss(tmp_path):
+    tr = mk_trainer(str(tmp_path), tiny_cfg())
+    tr.log_every = 5
+    history = []
+    tr.log = lambda *a: None
+    out = tr.train(40)
+    hist = out["history"]
+    assert hist[0][1] > hist[-1][1] + 0.05, hist
+
+
+def test_resume_is_bit_exact(tmp_path):
+    """5+5 steps with a restart in between == 10 straight steps."""
+    cfg = tiny_cfg()
+    a = mk_trainer(str(tmp_path / "a"), cfg)
+    a.ckpt_every = 5
+    a.train(5)          # checkpoints at step 5
+    a2 = mk_trainer(str(tmp_path / "a"), cfg, seed=99)  # different init!
+    assert a2.try_resume() and a2.step == 5
+    a2.train(10)
+
+    b = mk_trainer(str(tmp_path / "b"), cfg)
+    b.train(10)
+    assert checksum(a2.state.params) == checksum(b.state.params)
+
+
+def test_microbatch_equivalence(tmp_path):
+    """Gradient accumulation over 2 microbatches ~= single large batch."""
+    cfg = tiny_cfg()
+    t1 = mk_trainer(str(tmp_path / "m1"), cfg, micro=1)
+    t2 = mk_trainer(str(tmp_path / "m2"), cfg, micro=2)
+    t1.train(3)
+    t2.train(3)
+    l1 = jax.tree_util.tree_leaves(t1.state.params)
+    l2 = jax.tree_util.tree_leaves(t2.state.params)
+    worst = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(l1, l2))
+    assert worst < 0.05, worst  # loss normalization differs slightly
+
+
+def test_microbatch_split_layout():
+    b = {"inputs": jnp.arange(12).reshape(6, 2)}
+    out = microbatch_split(b, 3)
+    assert out["inputs"].shape == (3, 2, 2)
+    np.testing.assert_array_equal(np.asarray(out["inputs"][0]),
+                                  np.asarray(b["inputs"][:2]))
+
+
+def test_pick_microbatches_budget():
+    cfg = get_config("gemma3-27b")
+    n = pick_microbatches(cfg, 4096, 16, budget_bytes=4e9)
+    assert n >= 8  # 62 layers x 16 x 4096 x 5376 x 2B ~ 43 GB -> split
+    assert 16 % n == 0 or n <= 16
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(window=20, z_threshold=3.0)
+    for _ in range(15):
+        assert not w.observe(0.1 + np.random.RandomState(0).rand() * 1e-3)
+    assert w.observe(5.0)
+    assert w.flagged == 1
+
+
+def test_preemption_checkpoint(tmp_path):
+    tr = mk_trainer(str(tmp_path), tiny_cfg())
+    tr._preempted = False
+
+    orig_step = tr._train_step
+
+    calls = {"n": 0}
+
+    def step_and_preempt(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            tr._on_sigterm(None, None)
+        return orig_step(state, batch)
+
+    tr._train_step = step_and_preempt
+    out = tr.train(50)
+    assert out["preempted"] and out["step"] == 3
+    assert tr.ckpt.latest_step() == 3
+
+
+# -- serving ---------------------------------------------------------------
+
+def test_engine_serves_batches():
+    cfg = tiny_cfg()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=3, max_len=64)
+    uids = [eng.add_request(list(range(1, 5 + i)), max_new_tokens=6)
+            for i in range(7)]
+    done = eng.run()
+    assert len(done) == 7
+    assert all(r.done and 1 <= len(r.output) <= 6 for r in done)
+    assert eng.stats.decode_tokens > 0
+
+
+def test_engine_greedy_deterministic():
+    cfg = tiny_cfg()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, max_batch=2, max_len=64)
+        eng.add_request([1, 2, 3, 4], max_new_tokens=8)
+        outs.append(eng.run()[0].output)
+    assert outs[0] == outs[1]
+
+
+def test_engine_eos_stops():
+    cfg = tiny_cfg()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=1, max_len=64)
+    eng.add_request([1, 2, 3], max_new_tokens=32)
+    first = eng.run()[0].output
+    # re-serve declaring the first emitted token as EOS: must stop at 1
+    eng2 = Engine(cfg, params, max_batch=1, max_len=64, eos_id=first[0])
+    eng2.add_request([1, 2, 3], max_new_tokens=32)
+    assert len(eng2.run()[0].output) == 1

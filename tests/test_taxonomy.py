@@ -1,0 +1,82 @@
+"""Unit tests: operator taxonomy + scope-tag plumbing (paper §2.1.2)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.taxonomy import (NONGEMM_GROUPS, OpGroup, classify,
+                                 classify_hlo, classify_primitive,
+                                 is_gemm, is_nongemm, parse_scope, scope_tag)
+
+
+def test_scope_tag_roundtrip():
+    tag = scope_tag(OpGroup.NORMALIZATION, "rms_norm")
+    assert tag == "ng:normalization:rms_norm"
+    assert parse_scope(tag) == (OpGroup.NORMALIZATION, "rms_norm")
+
+
+def test_scope_tag_innermost_wins():
+    path = "ng:gemm:linear/foo/ng:activation:gelu"
+    assert parse_scope(path) == (OpGroup.ACTIVATION, "gelu")
+
+
+def test_scope_tag_rejects_unknown_group():
+    with pytest.raises(ValueError):
+        scope_tag("not_a_group", "x")
+
+
+def test_parse_scope_none_for_untagged():
+    assert parse_scope("jit(f)/while/body") is None
+    assert parse_scope("") is None
+
+
+@pytest.mark.parametrize("prim,group", [
+    ("dot_general", OpGroup.GEMM),
+    ("conv_general_dilated", OpGroup.GEMM),
+    ("reshape", OpGroup.MEMORY),
+    ("transpose", OpGroup.MEMORY),
+    ("add", OpGroup.ELEMENTWISE),
+    ("exp", OpGroup.ELEMENTWISE),
+    ("tanh", OpGroup.ACTIVATION),
+    ("reduce_sum", OpGroup.REDUCTION),
+    ("psum", OpGroup.COLLECTIVE),
+    ("scan", OpGroup.CONTROL),
+    ("nonexistent_prim", OpGroup.OTHER),
+])
+def test_classify_primitive(prim, group):
+    assert classify_primitive(prim) == group
+
+
+def test_classify_prefers_tag_over_primitive():
+    g, site = classify("add", "model/ng:normalization:layer_norm/add")
+    assert g == OpGroup.NORMALIZATION and site == "layer_norm"
+    g, site = classify("add", "")
+    assert g == OpGroup.ELEMENTWISE and site == "add"
+
+
+def test_classify_hlo_opcodes():
+    assert classify_hlo("dot")[0] == OpGroup.GEMM
+    assert classify_hlo("all-reduce")[0] == OpGroup.COLLECTIVE
+    assert classify_hlo("reshape")[0] == OpGroup.MEMORY
+    g, site = classify_hlo("fusion", "jit(f)/ng:logit:softmax/exp")
+    assert g == OpGroup.LOGIT and site == "softmax"
+
+
+def test_gemm_nongemm_partition():
+    assert is_gemm(OpGroup.GEMM) and not is_nongemm(OpGroup.GEMM)
+    for g in NONGEMM_GROUPS:
+        assert is_nongemm(g) and not is_gemm(g)
+    # collectives/control are neither (reported separately)
+    assert not is_nongemm(OpGroup.COLLECTIVE)
+    assert not is_nongemm(OpGroup.CONTROL)
+
+
+def test_named_scope_reaches_jaxpr():
+    from repro import nn
+
+    def f(x):
+        return nn.rms_norm(x, jnp.ones((x.shape[-1],)))
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((2, 8)))
+    stacks = [str(e.source_info.name_stack) for e in jaxpr.jaxpr.eqns]
+    assert any("ng:normalization:rms_norm" in s for s in stacks)
