@@ -1,5 +1,5 @@
-"""Paper Fig 1/5/6/7/8/10: GEMM vs NonGEMM latency split per model,
-unaccelerated (eager CPU wall-clock) vs accelerated (TPU-v5e roofline).
+"""Thin shim — paper Fig 1/5/6/7/8/10 (GEMM vs NonGEMM split) is now the
+``breakdown`` section of ``repro.bench``; this renders its rows.
 
 The headline number this must reproduce: NonGEMM share grows from ~27%
 (CPU) to ~55% (accelerated) on average (paper §4.5).
@@ -7,33 +7,18 @@ The headline number this must reproduce: NonGEMM share grows from ~27%
 
 from __future__ import annotations
 
-from repro.core.report import breakdown_csv, breakdown_table, shift_summary
+from repro.bench.schema import BenchCase
+from repro.bench.sections import breakdown_rows
+from repro.core.report import render_breakdown_csv, render_breakdown_rows
 
-from benchmarks.common import CASES, profile_case, profile_case_compiled
+from benchmarks.common import CASES
 
 
 def run(cases=None, csv: bool = False, compiled: bool = True) -> str:
-    eager_profiles = []
-    acc_profiles = []
-    compiled_profiles = []
-    for alias, arch, batch, seq in (cases or CASES):
-        e, a = profile_case(alias, arch, batch, seq)
-        eager_profiles.append(e)
-        acc_profiles.append(a)
-        if compiled:
-            compiled_profiles.append(
-                profile_case_compiled(alias, arch, batch, seq))
-    rows = eager_profiles + acc_profiles + compiled_profiles
-    out = [breakdown_csv(rows) if csv else breakdown_table(rows),
-           shift_summary(eager_profiles, acc_profiles)]
-    if compiled_profiles:
-        def avg(ps):
-            return sum(p.split["nongemm_frac"] for p in ps) / len(ps)
-        out.append(
-            f"beyond-paper: XLA-fused TPU roofline pulls the average NonGEMM "
-            f"share back to {100 * avg(compiled_profiles):.1f}% "
-            f"(from {100 * avg(acc_profiles):.1f}% eager-accelerated)\n")
-    return "\n".join(out)
+    cases = [c if isinstance(c, BenchCase) else BenchCase(*c)
+             for c in (cases or CASES)]
+    rows = breakdown_rows(cases, compiled=compiled)
+    return render_breakdown_csv(rows) if csv else render_breakdown_rows(rows)
 
 
 if __name__ == "__main__":

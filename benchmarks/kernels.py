@@ -1,121 +1,17 @@
-"""Paper §4.5 optimization direction: close the NonGEMM gap with fusion.
-
-Per kernel site, three HBM-traffic models of the same computation:
-
-    eager_MB   every operator is its own kernel (sum of per-op
-               operand+result bytes from the captured graph) — the
-               paper's torch-eager setting, where NonGEMM costs live
-    xla_MB     the jit-compiled module under the fusion-modeled analyzer
-               (what XLA fusion already buys)
-    pallas_MB  kernel-boundary IO (inputs once + outputs once) — what the
-               Pallas kernel moves
-
-plus an interpret-mode allclose check against ref.py. Pointwise sites
-show eager >> xla ~= pallas (XLA already fuses an isolated norm — the gap
-the paper measures is an *eager-framework* cost); attention shows
-eager >> xla >> pallas (scans block XLA fusion; the flash kernel's VMEM
-carry does not hit HBM).
-"""
+"""Thin shim — paper §4.5 (Pallas kernel fusion: modeled HBM traffic +
+correctness) is now the ``kernels`` section of ``repro.bench``; this
+renders its rows.  See ``repro/bench/sections.py`` for the three traffic
+models (eager / XLA-fused / Pallas kernel-boundary IO)."""
 
 from __future__ import annotations
 
-import io
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import nn
-from repro.core.graph import capture, dtype_bytes
-from repro.core.hlo import analyze_hlo
-from repro.kernels import ops, ref
-from repro.models.attention import flash_attention_jnp
-
-
-def _eager_bytes(fn, *args) -> float:
-    return sum(r.bytes_accessed for r in capture(fn, *args))
-
-
-def _xla_bytes(fn, *args) -> float:
-    text = jax.jit(fn).lower(*args).compile().as_text()
-    return analyze_hlo(text).bytes
-
-
-def _io_bytes(fn, *args) -> float:
-    out = jax.eval_shape(fn, *args)
-    leaves = jax.tree_util.tree_leaves((args, out))
-    return float(sum(np.prod(l.shape) * dtype_bytes(l.dtype)
-                     for l in leaves))
+from repro.bench import BenchContext
+from repro.bench.sections import section_kernels
+from repro.core.report import render_kernel_rows
 
 
 def run() -> str:
-    key = jax.random.PRNGKey(0)
-    d = 2048
-    x = jax.random.normal(key, (8, 512, d), jnp.bfloat16)
-    res = jax.random.normal(jax.random.PRNGKey(1), (8, 512, d), jnp.bfloat16)
-    w = jnp.ones((d,), jnp.bfloat16)
-    b = jnp.zeros((d,), jnp.bfloat16)
-    gate = jax.random.normal(key, (8, 512, 2 * d), jnp.bfloat16)
-    up = jax.random.normal(jax.random.PRNGKey(2), (8, 512, 2 * d),
-                           jnp.bfloat16)
-    logits = jax.random.normal(key, (256, 32000), jnp.float32)
-    labels = jax.random.randint(jax.random.PRNGKey(3), (256,), 0, 32000)
-    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.bfloat16)
-    kk = jax.random.normal(jax.random.PRNGKey(4), (1, 1024, 2, 64),
-                           jnp.bfloat16)
-    v = jax.random.normal(jax.random.PRNGKey(5), (1, 1024, 2, 64),
-                          jnp.bfloat16)
-
-    sites = [
-        ("rms_norm", lambda a: nn.rms_norm(a, w), (x,),
-         lambda: np.allclose(
-             np.asarray(ops.rms_norm(x, w, interpret=True), np.float32),
-             np.asarray(ref.rms_norm(x, w), np.float32), atol=3e-2)),
-        ("layer_norm", lambda a: nn.layer_norm(a, w, b), (x,),
-         lambda: np.allclose(
-             np.asarray(ops.layer_norm(x, w, b, interpret=True), np.float32),
-             np.asarray(ref.layer_norm(x, w, b), np.float32), atol=3e-2)),
-        ("fused_add_rms_norm",
-         lambda a, r: nn.fused_add_rms_norm(a, r, w), (x, res),
-         lambda: np.allclose(
-             np.asarray(ops.fused_add_rms_norm(x, res, w,
-                                               interpret=True)[0],
-                        np.float32),
-             np.asarray(ref.fused_add_rms_norm(x, res, w)[0], np.float32),
-             atol=3e-2)),
-        ("swiglu", nn.swiglu, (gate, up),
-         lambda: np.allclose(
-             np.asarray(ops.swiglu(gate, up, interpret=True), np.float32),
-             np.asarray(ref.swiglu(gate, up), np.float32), atol=3e-2)),
-        ("softmax_xent",
-         lambda l: nn.softmax_cross_entropy(l, labels), (logits,),
-         lambda: np.allclose(
-             np.asarray(ops.softmax_xent(logits, labels, interpret=True)),
-             np.asarray(ref.softmax_xent(logits, labels)), atol=1e-4)),
-        ("flash_attention",
-         lambda a, b_, c: flash_attention_jnp(a, b_, c, causal=True,
-                                              chunk_q=256, chunk_kv=256),
-         (q, kk, v),
-         lambda: np.allclose(
-             np.asarray(ops.flash_attention(q, kk, v, causal=True,
-                                            interpret=True), np.float32),
-             np.asarray(ref.attention(q, kk, v, causal=True), np.float32),
-             atol=5e-2)),
-    ]
-
-    buf = io.StringIO()
-    buf.write(f"{'kernel site':<20} {'eager_MB':>9} {'xla_MB':>8} "
-              f"{'pallas_MB':>10} {'eager/pallas':>13} {'xla/pallas':>11} "
-              f"{'allclose':>9}\n")
-    for name, fn, args, check in sites:
-        eager_b = _eager_bytes(fn, *args)
-        xla_b = _xla_bytes(fn, *args)
-        io_b = _io_bytes(fn, *args)
-        ok = check()
-        buf.write(f"{name:<20} {eager_b/1e6:>9.1f} {xla_b/1e6:>8.1f} "
-                  f"{io_b/1e6:>10.1f} {eager_b/io_b:>12.2f}x "
-                  f"{xla_b/io_b:>10.2f}x {str(bool(ok)):>9}\n")
-    return buf.getvalue()
+    return render_kernel_rows(section_kernels(BenchContext("full", [])))
 
 
 if __name__ == "__main__":

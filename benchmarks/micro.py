@@ -1,51 +1,21 @@
-"""Paper Table 2: the NonGEMM operator micro-benchmark with realistic
-input shapes (the paper's own example shapes + shapes harvested from a
-real trace of our zoo)."""
+"""Thin shim — paper Table 2 (NonGEMM operator micro-benchmark) is now
+the ``micro`` / ``micro_harvested`` sections of ``repro.bench``; this
+renders their rows."""
 
 from __future__ import annotations
 
-import io
-
-from repro.core import capture, harvest_shapes
-from repro.core.microbench import TABLE2_SHAPES, run_micro, run_suite
-
-from benchmarks.common import build
+from repro.bench.sections import harvested_rows, micro_rows
+from repro.core.report import render_micro_rows
 
 
 def run(repeats: int = 5, measure_eager: bool = True) -> str:
-    buf = io.StringIO()
-    buf.write(f"{'operator':<18} {'group':<14} {'shape':<22} "
-              f"{'jit_us':>10} {'eager_us':>10} {'tpu_model_us':>12}\n")
-    for name in TABLE2_SHAPES:
-        r = run_micro(name, repeats=repeats, measure_eager=measure_eager)
-        buf.write(f"{r.name:<18} {r.group:<14} {str(r.shape):<22} "
-                  f"{r.jit_us:>10.1f} {r.eager_us:>10.1f} "
-                  f"{r.tpu_model_us:>12.2f}\n")
-    return buf.getvalue()
+    return render_micro_rows(micro_rows(repeats=repeats,
+                                        measure_eager=measure_eager))
 
 
 def run_harvested(arch: str = "llama2-7b", repeats: int = 3) -> str:
-    """Micro-bench driven by shapes harvested from a real model trace —
-    the paper's 'input argument specification extracted from real data'."""
-    fwd, params, inputs = build(arch, 1, 16)
-    shapes = harvest_shapes(capture(fwd, params, inputs))
-    buf = io.StringIO()
-    buf.write(f"harvested from {arch}:\n")
-    wanted = {"rms_norm", "softmax", "silu", "gelu", "add"}
-    for (group, site), shape_list in sorted(shapes.items()):
-        if site not in wanted or not shape_list or not shape_list[0]:
-            continue
-        shape = shape_list[0][0]
-        if not shape:
-            continue
-        try:
-            r = run_micro(site if site in TABLE2_SHAPES else "add",
-                          shape=shape, repeats=repeats, measure_eager=False)
-        except Exception:
-            continue
-        buf.write(f"  {site:<18} {group:<14} {str(shape):<20} "
-                  f"jit {r.jit_us:8.1f}us  tpu_model {r.tpu_model_us:8.2f}us\n")
-    return buf.getvalue()
+    rows = harvested_rows(arch=arch, repeats=repeats)
+    return f"harvested from {arch}:\n" + render_micro_rows(rows)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,20 @@
-"""Paper Fig 9/11/12: per-operator-group share of execution time,
-CPU-only vs accelerated configurations."""
+"""Thin shim — paper Fig 9/11/12 (per-operator-group shares) is now the
+``opgroups`` section of ``repro.bench``; this renders its rows."""
 
 from __future__ import annotations
 
-from repro.core.report import group_table
+from repro.bench import BenchContext
+from repro.bench.schema import BenchCase
+from repro.bench.sections import section_opgroups
+from repro.core.report import render_group_rows
 
-from benchmarks.common import CASES, profile_case
+from benchmarks.common import CASES
 
 
 def run(cases=None) -> str:
-    profiles = []
-    for alias, arch, batch, seq in (cases or CASES):
-        e, a = profile_case(alias, arch, batch, seq)
-        profiles += [e, a]
-    return group_table(profiles)
+    cases = [c if isinstance(c, BenchCase) else BenchCase(*c)
+             for c in (cases or CASES)]
+    return render_group_rows(section_opgroups(BenchContext("full", cases)))
 
 
 if __name__ == "__main__":

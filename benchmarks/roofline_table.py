@@ -1,62 +1,33 @@
-"""Assignment §Roofline: render the per-(arch x shape x mesh) roofline
-table from the dry-run JSONs (results/dryrun)."""
+"""Thin shim — the dry-run roofline table is now the ``roofline`` section
+of ``repro.bench``; this renders its rows."""
 
 from __future__ import annotations
 
-import glob
-import io
-import json
-import os
+from repro.bench import BenchContext
+from repro.bench.runner import SkipSection
+from repro.bench.sections import (RESULTS_DRYRUN, _roofline_rows,
+                                  load_dryrun, section_roofline)
+from repro.core.report import render_roofline_rows
 
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
-RESULTS_OPT = os.path.join(os.path.dirname(__file__), "..", "results",
-                           "dryrun_opt")
+RESULTS = RESULTS_DRYRUN
 
 
-def load(mesh: str = "single", root: str = RESULTS):
-    rows = []
-    for path in sorted(glob.glob(os.path.join(root, mesh, "*.json"))):
-        with open(path) as f:
-            rows.append(json.load(f))
-    return rows
+def load(mesh: str = "single", root: str = RESULTS_DRYRUN):
+    return load_dryrun(mesh, root)
 
 
 def render(mesh: str = "single", kernels: bool = True,
-           root: str = RESULTS, label: str = "baseline") -> str:
-    rows = load(mesh, root)
-    key = "roofline" if kernels else "roofline_xla_only"
-    buf = io.StringIO()
-    buf.write(f"== roofline ({mesh}-pod, {label}, "
-              f"{'Pallas-kernel' if kernels else 'XLA-only'} model) ==\n")
-    buf.write(f"{'arch':<22} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
-              f"{'collective_s':>13} {'bound':>11} {'useful':>7} {'MFU':>6}\n")
-    for r in rows:
-        if "skipped" in r:
-            buf.write(f"{r['arch']:<22} {r['shape']:<12} "
-                      f"{'skip: ' + r['skipped']}\n")
-            continue
-        if "error" in r:
-            buf.write(f"{r['arch']:<22} {r['shape']:<12} ERROR\n")
-            continue
-        t = r[key]
-        buf.write(f"{r['arch']:<22} {r['shape']:<12} {t['compute_s']:>10.4f} "
-                  f"{t['memory_s']:>10.4f} {t['collective_s']:>13.4f} "
-                  f"{t['dominant']:>11} {t['useful_ratio']:>7.2f} "
-                  f"{t['mfu']:>6.3f}\n")
-    return buf.getvalue()
+           root: str = RESULTS_DRYRUN, label: str = "baseline") -> str:
+    return render_roofline_rows(_roofline_rows(mesh, root, label,
+                                               kernels=kernels))
 
 
 def run() -> str:
-    out = [render("single", kernels=True)]
-    if glob.glob(os.path.join(RESULTS, "multi", "*.json")):
-        out.append(render("multi", kernels=True))
-    if glob.glob(os.path.join(RESULTS_OPT, "single", "*.json")):
-        out.append(render("single", kernels=True, root=RESULTS_OPT,
-                          label="optimized"))
-    if glob.glob(os.path.join(RESULTS_OPT, "multi", "*.json")):
-        out.append(render("multi", kernels=True, root=RESULTS_OPT,
-                          label="optimized"))
-    return "\n".join(out)
+    try:
+        rows = section_roofline(BenchContext("full", []))
+    except SkipSection as e:
+        return f"(roofline skipped: {e})\n"
+    return render_roofline_rows(rows)
 
 
 if __name__ == "__main__":

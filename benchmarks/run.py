@@ -1,54 +1,29 @@
-"""Benchmark driver: one section per paper table/figure + the roofline
-table from the dry-run artifacts.
+"""Thin shim — the benchmark driver now lives in ``repro.bench``.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+
+is equivalent to
+
+    python -m repro.bench run [--quick | --full]
+
+which runs every section, writes the machine-readable artifact to
+``results/bench.json``, and renders the text tables from it.  Like the
+original driver, no flag means the full zoo.
 """
 
 from __future__ import annotations
 
-import argparse
 import sys
-import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="subset of cases (CI)")
-    args = ap.parse_args()
+def main() -> int:
+    from repro.bench.__main__ import main as bench_main
 
-    from benchmarks import breakdown, kernels, micro, opgroups, roofline_table
-    from benchmarks import top_table
-    from benchmarks.common import CASES
-
-    cases = CASES[:4] if args.quick else CASES
-
-    sections = [
-        ("Fig 1/5/8/10 — GEMM vs NonGEMM breakdown "
-         "(eager CPU measured / eager A100 modeled / compiled TPU modeled)",
-         lambda: breakdown.run(cases)),
-        ("Fig 9/11/12 — per-operator-group shares",
-         lambda: opgroups.run(cases)),
-        ("Table 5 — most expensive NonGEMM group (accelerated)",
-         lambda: top_table.run(cases)),
-        ("Table 2 — NonGEMM operator micro-benchmark",
-         lambda: micro.run(repeats=3, measure_eager=not args.quick)),
-        ("Table 2b — micro-bench on shapes harvested from a real trace",
-         lambda: micro.run_harvested()),
-        ("§4.5 — Pallas kernel fusion: modeled HBM traffic + correctness",
-         kernels.run),
-        ("§Roofline — dry-run roofline table (results/dryrun)",
-         roofline_table.run),
-    ]
-    for title, fn in sections:
-        print(f"\n=== {title} ===")
-        t0 = time.time()
-        try:
-            print(fn())
-        except Exception as e:  # keep the harness going
-            print(f"SECTION FAILED: {e!r}", file=sys.stderr)
-        print(f"[{time.time() - t0:.1f}s]")
+    argv = sys.argv[1:]
+    if "--quick" not in argv and "--full" not in argv:
+        argv = ["--full"] + argv
+    return bench_main(["run"] + argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

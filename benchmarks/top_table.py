@@ -1,19 +1,21 @@
-"""Paper Table 5: the most expensive NonGEMM operator group per model on
-the accelerated platform."""
+"""Thin shim — paper Table 5 (most expensive NonGEMM group, accelerated)
+is now the ``top_table`` section of ``repro.bench``; this renders its
+rows."""
 
 from __future__ import annotations
 
-from repro.core.report import top_group_table
+from repro.bench import BenchContext
+from repro.bench.schema import BenchCase
+from repro.bench.sections import section_top_table
+from repro.core.report import render_top_rows
 
-from benchmarks.common import CASES, profile_case
+from benchmarks.common import CASES
 
 
 def run(cases=None) -> str:
-    profiles = []
-    for alias, arch, batch, seq in (cases or CASES):
-        _, a = profile_case(alias, arch, batch, seq)
-        profiles.append(a)
-    return top_group_table(profiles)
+    cases = [c if isinstance(c, BenchCase) else BenchCase(*c)
+             for c in (cases or CASES)]
+    return render_top_rows(section_top_table(BenchContext("full", cases)))
 
 
 if __name__ == "__main__":

@@ -1,4 +1,15 @@
-"""Quick dev loop: one forward/loss/prefill/decode per reduced arch."""
+"""Quick dev loop: one forward/loss/prefill/decode per reduced arch.
+
+    PYTHONPATH=src python scripts/smoke_check.py [--json results/smoke.json]
+                                                 [arch ...]
+
+``--json`` writes a small machine-readable record per arch (status, loss)
+next to the bench artifact, so failures are diffable rather than only
+visible in scrollback.
+"""
+import argparse
+import json
+import os
 import sys
 
 import jax
@@ -9,9 +20,8 @@ from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import (init_lm, lm_forward, lm_loss, init_lm_cache,
                           lm_prefill, lm_decode)
 
-archs = sys.argv[1:] or ARCH_IDS
 
-for a in archs:
+def check_arch(a: str) -> dict:
     cfg = reduced(get_config(a))
     key = jax.random.PRNGKey(0)
     params = init_lm(key, cfg)
@@ -42,5 +52,37 @@ for a in archs:
             params, tok, caches)
         assert step_logits.shape == (b, cfg.vocab_size)
         assert not bool(jnp.any(jnp.isnan(step_logits.astype(jnp.float32))))
-    print(f"OK {a:<24} loss={float(loss):.3f}")
-print("all smoke checks passed")
+    return {"arch": a, "status": "ok", "loss": float(loss)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("archs", nargs="*", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write per-arch records to this path")
+    args = ap.parse_args(argv)
+
+    records, failed = [], 0
+    for a in (args.archs or ARCH_IDS):
+        try:
+            rec = check_arch(a)
+            print(f"OK {a:<24} loss={rec['loss']:.3f}")
+        except Exception as e:
+            rec = {"arch": a, "status": "failed", "error": repr(e)}
+            failed += 1
+            print(f"FAIL {a:<22} {e!r}", file=sys.stderr)
+        records.append(rec)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"smoke": records}, f, indent=1)
+        print(f"wrote {args.json}")
+
+    print("all smoke checks passed" if not failed
+          else f"{failed} arch(es) failed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

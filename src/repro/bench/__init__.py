@@ -1,0 +1,35 @@
+"""repro.bench — the machine-readable benchmark pipeline.
+
+Everything the paper reproduction *measures* flows through here:
+
+    cases.py     the model zoo cases profiled by every section
+    schema.py    BenchCase / SectionResult / BenchResult dataclasses +
+                 the versioned JSON artifact format and its validator
+    sections.py  one registered section per paper table/figure, each
+                 returning structured rows (never pre-rendered text)
+    runner.py    tiered (--quick/--full) execution with per-section
+                 timeouts, producing a single ``results/bench.json``
+    compare.py   regression CLI: diff two artifacts, exit nonzero on
+                 latency-share / correctness / modeled-number drift
+
+Text tables are *renderers over the artifact* (``repro.core.report``),
+so CI and humans read the same numbers.
+
+    python -m repro.bench run --quick
+    python -m repro.bench compare benchmarks/baseline.json results/bench.json
+"""
+
+from .schema import (SCHEMA_VERSION, BenchCase, BenchResult, SectionResult,
+                     SchemaError, validate_artifact)
+from .cases import (CASES, bench_config, build, profile_case,
+                    profile_case_compiled, quick_cases, tier_cases)
+from .runner import (SECTIONS, BenchContext, register_section, run_bench,
+                     run_section)
+
+__all__ = [
+    "SCHEMA_VERSION", "BenchCase", "BenchResult", "SectionResult",
+    "SchemaError", "validate_artifact", "CASES", "bench_config", "build",
+    "profile_case", "profile_case_compiled", "quick_cases", "tier_cases",
+    "SECTIONS", "BenchContext", "register_section", "run_bench",
+    "run_section",
+]

@@ -1,0 +1,76 @@
+"""CLI entry point.
+
+    python -m repro.bench run [--quick | --full] [--out results/bench.json]
+    python -m repro.bench compare baseline.json new.json [--tolerance ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+
+def _cmd_run(args) -> int:
+    from repro.core import report
+
+    from .runner import run_bench
+
+    tier = "quick" if args.quick else "full"
+    try:
+        result = run_bench(tier=tier, section_names=args.sections,
+                           timeout_scale=args.timeout_scale,
+                           progress=lambda m: print(m, flush=True))
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    result.dump(args.out)
+    print(report.render_artifact(result))
+    print(f"wrote {args.out}")
+    bad = [s for s in result.sections if s.status in ("failed", "timeout")]
+    if bad:
+        for s in bad:
+            print(f"section {s.name}: {s.status}\n{s.error}",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+def _cmd_compare(args, extra: List[str]) -> int:
+    from .compare import main as compare_main
+
+    return compare_main(extra)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ap = argparse.ArgumentParser(prog="python -m repro.bench")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run_p = sub.add_parser("run", help="run the bench suite, write the "
+                                       "JSON artifact, render the tables")
+    tier = run_p.add_mutually_exclusive_group()
+    tier.add_argument("--quick", action="store_true",
+                      help="CI subset of cases + reduced repeats (default)")
+    tier.add_argument("--full", action="store_true", help="the whole zoo")
+    run_p.add_argument("--out", default="results/bench.json",
+                       help="artifact path (default results/bench.json)")
+    run_p.add_argument("--sections", nargs="*", default=None,
+                       help="run only these section names")
+    run_p.add_argument("--timeout-scale", type=float, default=1.0,
+                       help="multiply every per-section timeout")
+
+    sub.add_parser("compare", add_help=False,
+                   help="diff two artifacts (see python -m "
+                        "repro.bench.compare --help)")
+
+    if argv and argv[0] == "compare":
+        return _cmd_compare(None, argv[1:])
+    args = ap.parse_args(argv)
+    if not args.quick and not args.full:
+        args.quick = True
+    return _cmd_run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

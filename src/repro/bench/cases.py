@@ -1,0 +1,139 @@
+"""The benchmark zoo: profile each case in the paper's setting.
+
+The paper's LM case studies run batch-1, short-sequence (generation-style)
+inference on full-width models — the regime where GEMMs are weight-bound
+and NonGEMM operators (each its own kernel in eager mode) carry launch
+overhead + low arithmetic intensity. We keep every architecture's TRUE
+width/vocab (scaled down only if the f32 eager working set would not fit
+this container) and truncate depth to one block-pattern repeat: latency
+*shares* are depth-invariant for homogeneous stacks.
+
+Three views per case:
+    eager CPU        measured wall-clock per op   (paper's CPU columns)
+    eager A100 model per-op roofline + 5us launch (paper's GPU columns)
+    compiled TPU     XLA-fused roofline           (beyond-paper: the gap
+                                                   fusion closes, §4.5)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (ModelProfile, profile_accelerated,
+                        profile_accelerated_eager, profile_eager)
+from repro.models import init_lm, lm_forward
+
+from .schema import BenchCase
+
+_Q = ("quick", "full")
+_F = ("full",)
+
+#: the zoo — quick tier is the CI subset, full is the paper zoo
+CASES: List[BenchCase] = [
+    BenchCase("gpt2-xl b-1", "gpt2-xl", 1, 16, _Q),
+    BenchCase("gpt2-xl b-8", "gpt2-xl", 8, 16, _Q),
+    BenchCase("llama2-7b b-1", "llama2-7b", 1, 16, _Q),
+    BenchCase("bert b-1", "bert-base", 1, 128, _Q),
+    BenchCase("bert b-8", "bert-base", 8, 128, _F),
+    BenchCase("vit-b16 b-1", "vit-b16", 1, 197, _F),
+    BenchCase("granite-3-8b b-1", "granite-3-8b", 1, 16, _F),
+    BenchCase("gemma3-27b b-1", "gemma3-27b", 1, 16, _F),
+    BenchCase("qwen2-moe b-1", "qwen2-moe-a2.7b", 1, 16, _F),
+    BenchCase("recurrentgemma b-1", "recurrentgemma-2b", 1, 16, _F),
+    BenchCase("xlstm b-1", "xlstm-350m", 1, 16, _F),
+    BenchCase("deepseek-v2 b-1", "deepseek-v2-lite-16b", 1, 16, _F),
+]
+
+
+def tier_cases(tier: str,
+               cases: Optional[Sequence[BenchCase]] = None
+               ) -> List[BenchCase]:
+    return [c for c in (cases or CASES) if tier in c.tiers]
+
+
+def quick_cases() -> List[BenchCase]:
+    return tier_cases("quick")
+
+
+#: f32 eager working set budget: params <= 1.2B (~5 GB)
+_PARAM_BUDGET = 1.2e9
+
+
+def bench_config(arch: str):
+    cfg = get_config(arch)
+    # one pattern repeat of depth (shares are depth-invariant)
+    cfg = cfg.replace(n_layers=max(len(cfg.block_pattern), 2),
+                      first_dense_layers=min(cfg.first_dense_layers, 1),
+                      scan_layers=False, remat=False, loss_chunk=0,
+                      dtype="float32", param_dtype="float32",
+                      attn_chunk_q=512, attn_chunk_kv=512)
+    while cfg.n_params() > _PARAM_BUDGET:
+        cfg = cfg.replace(
+            d_model=cfg.d_model // 2,
+            d_ff=max(cfg.d_ff // 2, 0),
+            moe_d_ff=max(cfg.moe_d_ff // 2, 0),
+            n_heads=max(cfg.n_heads // 2, 1),
+            n_kv_heads=max(cfg.n_kv_heads // 2, 1),
+            vocab_size=max(cfg.vocab_size // 2, 1024),
+            lru_width=(cfg.lru_width // 2 if cfg.lru_width else None),
+        )
+    return cfg
+
+
+@functools.lru_cache(maxsize=None)
+def build(arch: str, batch: int, seq: int):
+    """Returns (fwd(params, inputs), params, inputs).
+
+    Params are passed as arguments (not closure constants): capturing GBs
+    of weights as jit constants bloats lowering and skews the profiles.
+    """
+    cfg = bench_config(arch)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (batch, seq, cfg.d_model),
+                                   jnp.float32)
+
+    def fwd(params, inputs):
+        return lm_forward(params, inputs, cfg)
+
+    return fwd, params, inputs
+
+
+@functools.lru_cache(maxsize=None)
+def profile_case(alias: str, arch: str, batch: int, seq: int,
+                 eager_repeats: int = 3) -> Tuple[ModelProfile, ModelProfile]:
+    """(measured eager CPU, modeled eager-A100) — the paper's two columns.
+
+    Cached: several sections (breakdown, opgroups, top_table) read the same
+    profiles, and re-measuring would both waste CI minutes and let the
+    sections disagree about the shares they serialize.
+    """
+    fwd, params, inputs = build(arch, batch, seq)
+    eager = profile_eager(fwd, params, inputs, name=alias,
+                          repeats=eager_repeats)
+    acc = profile_accelerated_eager(fwd, params, inputs, name=alias)
+    return eager, acc
+
+
+@functools.lru_cache(maxsize=None)
+def profile_case_compiled(alias: str, arch: str, batch: int,
+                          seq: int) -> ModelProfile:
+    """Beyond-paper column: XLA-compiled + fused on the TPU roofline."""
+    fwd, params, inputs = build(arch, batch, seq)
+    return profile_accelerated(fwd, params, inputs, name=alias)
+
+
+def clear_caches() -> None:
+    """Drop memoized params/profiles (can hold GBs); the runner calls
+    this after each bench run, and tests/REPLs may call it directly."""
+    profile_case.cache_clear()
+    profile_case_compiled.cache_clear()
+    build.cache_clear()

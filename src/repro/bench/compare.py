@@ -1,0 +1,260 @@
+"""Regression gate: diff two bench artifacts, exit nonzero on drift.
+
+    python -m repro.bench.compare baseline.json new.json [--tolerance 0.05]
+
+What is gated, and how:
+
+  * section health   — a section that was "ok" in the baseline must still
+                       be "ok" (failed/timeout/missing is a regression;
+                       "skipped" both sides is fine).
+  * latency shares   — per (case, mode) row of the share sections
+                       (breakdown/opgroups/top_table): |Δ gemm_frac| and
+                       |Δ nongemm_frac| must stay within ``--tolerance``
+                       (absolute, default 0.05 = five share points).
+  * correctness      — kernels section: an ``allclose=true`` site turning
+                       false is always a regression, no tolerance.
+  * modeled numbers  — deterministic roofline/traffic models
+                       (``tpu_model_us``, ``eager_mb``/``xla_mb``/
+                       ``pallas_mb``, roofline ``compute_s``/``memory_s``/
+                       ``mfu``): relative drift beyond ``--rel-tolerance``
+                       (default 0.15).
+  * wall-clock       — measured timings (``jit_us``, ``eager_us``,
+                       section ``wall_s``) are noisy on shared CI runners,
+                       so they are only checked when ``--time-tolerance``
+                       is given (relative, e.g. 3.0 = up to 4x slower).
+
+Rows present only in the *new* artifact are additions, never regressions.
+Exit codes: 0 clean, 1 regressions found, 2 bad input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from .schema import SHARE_SECTIONS, BenchResult, SchemaError
+
+SHARE_KEYS = ("gemm_frac", "nongemm_frac")
+
+#: deterministic modeled quantities per section -> rel-tolerance gated
+MODELED_KEYS = {
+    "micro": ("tpu_model_us",),
+    "micro_harvested": ("tpu_model_us",),
+    "kernels": ("eager_mb", "xla_mb", "pallas_mb"),
+    "roofline": ("compute_s", "memory_s", "collective_s", "mfu",
+                 "useful_ratio"),
+}
+
+#: measured (noisy) quantities -> only gated under --time-tolerance
+MEASURED_KEYS = {
+    "micro": ("jit_us", "eager_us"),
+    "micro_harvested": ("jit_us", "eager_us"),
+}
+
+#: how rows are keyed for matching, per section
+ROW_KEYS = {
+    "breakdown": ("case", "mode"),
+    "opgroups": ("case", "mode"),
+    "top_table": ("case", "mode"),
+    "micro": ("operator", "shape"),
+    "micro_harvested": ("operator", "shape"),
+    "kernels": ("site",),
+    "roofline": ("arch", "shape", "mesh", "label", "model"),
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    severity: str          # "regression" | "warning" | "info"
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.severity.upper():<10}] {self.where}: {self.message}"
+
+
+def _row_key(section: str, row: dict) -> Tuple[str, ...]:
+    keys = ROW_KEYS.get(section)
+    if not keys:
+        # unknown section: identify rows by their scalar-ish fields
+        return tuple(sorted(f"{k}={v}" for k, v in row.items()
+                            if isinstance(v, (str, int))))
+    return tuple(str(row.get(k)) for k in keys)
+
+
+def _index_rows(section: str, rows: List[dict]) -> Dict[Tuple, dict]:
+    return {_row_key(section, r): r for r in rows}
+
+
+def _rel_delta(old: float, new: float) -> float:
+    denom = max(abs(old), 1e-12)
+    return abs(new - old) / denom
+
+
+def compare_artifacts(old: BenchResult, new: BenchResult,
+                      tolerance: float = 0.05,
+                      rel_tolerance: float = 0.15,
+                      time_tolerance: Optional[float] = None
+                      ) -> List[Finding]:
+    """Pure comparison — returns findings; CLI decides the exit code."""
+    findings: List[Finding] = []
+
+    if new.schema_version != old.schema_version:
+        findings.append(Finding(
+            "info", "artifact",
+            f"schema_version {old.schema_version} -> {new.schema_version}"))
+    if new.tier != old.tier:
+        findings.append(Finding(
+            "warning", "artifact",
+            f"comparing different tiers: {old.tier!r} vs {new.tier!r}"))
+
+    for old_sec in old.sections:
+        new_sec = new.section(old_sec.name)
+        where = f"section {old_sec.name}"
+
+        if new_sec is None:
+            if old_sec.status == "ok":
+                findings.append(Finding("regression", where,
+                                        "present in baseline, missing now"))
+            continue
+        if old_sec.status == "ok" and new_sec.status != "ok":
+            err = (new_sec.error or "").strip().splitlines()
+            findings.append(Finding(
+                "regression", where,
+                f"status ok -> {new_sec.status}"
+                + (f" ({err[-1]})" if err else "")))
+            continue
+        if old_sec.status != "ok" and new_sec.status == "ok":
+            findings.append(Finding("info", where,
+                                    f"status {old_sec.status} -> ok"))
+        if new_sec.status != "ok":
+            continue
+
+        if time_tolerance is not None and old_sec.wall_s > 0 and \
+                new_sec.wall_s > old_sec.wall_s:
+            d = _rel_delta(old_sec.wall_s, new_sec.wall_s)
+            if d > time_tolerance:
+                findings.append(Finding(
+                    "regression", where,
+                    f"wall_s slowed {old_sec.wall_s:.2f}s -> "
+                    f"{new_sec.wall_s:.2f}s (rel Δ={d:.2f} > "
+                    f"{time_tolerance})"))
+
+        old_rows = _index_rows(old_sec.name, old_sec.rows)
+        new_rows = _index_rows(old_sec.name, new_sec.rows)
+
+        for key, orow in old_rows.items():
+            nrow = new_rows.get(key)
+            rwhere = f"{old_sec.name}[{', '.join(key)}]"
+            if nrow is None:
+                findings.append(Finding("regression", rwhere,
+                                        "row present in baseline, missing "
+                                        "now"))
+                continue
+
+            if old_sec.name in SHARE_SECTIONS:
+                for k in SHARE_KEYS:
+                    if k in orow and k in nrow:
+                        d = abs(float(nrow[k]) - float(orow[k]))
+                        if d > tolerance:
+                            findings.append(Finding(
+                                "regression", rwhere,
+                                f"{k} moved {float(orow[k]):.4f} -> "
+                                f"{float(nrow[k]):.4f} "
+                                f"(|Δ|={d:.4f} > {tolerance})"))
+
+            if old_sec.name == "top_table":
+                if orow.get("top_group") != nrow.get("top_group"):
+                    findings.append(Finding(
+                        "warning", rwhere,
+                        f"top NonGEMM group changed "
+                        f"{orow.get('top_group')} -> "
+                        f"{nrow.get('top_group')}"))
+
+            if old_sec.name == "kernels":
+                if orow.get("allclose") is True and \
+                        nrow.get("allclose") is not True:
+                    findings.append(Finding(
+                        "regression", rwhere,
+                        "kernel correctness check allclose true -> "
+                        f"{nrow.get('allclose')}"))
+
+            for k in MODELED_KEYS.get(old_sec.name, ()):
+                ov, nv = orow.get(k), nrow.get(k)
+                if isinstance(ov, (int, float)) and \
+                        isinstance(nv, (int, float)):
+                    d = _rel_delta(float(ov), float(nv))
+                    if d > rel_tolerance:
+                        findings.append(Finding(
+                            "regression", rwhere,
+                            f"modeled {k} moved {ov:.4g} -> {nv:.4g} "
+                            f"(rel Δ={d:.2f} > {rel_tolerance})"))
+
+            if time_tolerance is not None:
+                for k in MEASURED_KEYS.get(old_sec.name, ()):
+                    ov, nv = orow.get(k), nrow.get(k)
+                    # ov == 0 means "not measured in this tier", not fast
+                    if isinstance(ov, (int, float)) and \
+                            isinstance(nv, (int, float)) and \
+                            float(ov) > 0 and float(nv) > float(ov):
+                        d = _rel_delta(float(ov), float(nv))
+                        if d > time_tolerance:
+                            findings.append(Finding(
+                                "regression", rwhere,
+                                f"measured {k} slowed {ov:.4g} -> {nv:.4g} "
+                                f"(rel Δ={d:.2f} > {time_tolerance})"))
+
+        added = set(new_rows) - set(old_rows)
+        if added:
+            findings.append(Finding(
+                "info", f"section {old_sec.name}",
+                f"{len(added)} new row(s) not in baseline"))
+
+    for new_sec in new.sections:
+        if old.section(new_sec.name) is None:
+            findings.append(Finding("info", f"section {new_sec.name}",
+                                    "new section not in baseline"))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench.compare",
+        description="Diff two bench artifacts; exit 1 on regressions.")
+    ap.add_argument("baseline", help="baseline bench.json")
+    ap.add_argument("new", help="candidate bench.json")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="abs tolerance on GEMM/NonGEMM share fractions "
+                         "(default 0.05)")
+    ap.add_argument("--rel-tolerance", type=float, default=0.15,
+                    help="relative tolerance on deterministic modeled "
+                         "numbers (default 0.15)")
+    ap.add_argument("--time-tolerance", type=float, default=None,
+                    help="relative tolerance on measured wall-clock "
+                         "(unchecked unless given; e.g. 3.0)")
+    args = ap.parse_args(argv)
+
+    try:
+        old = BenchResult.load(args.baseline)
+        new = BenchResult.load(args.new)
+    except (OSError, ValueError, SchemaError) as e:
+        print(f"error loading artifacts: {e}", file=sys.stderr)
+        return 2
+
+    findings = compare_artifacts(old, new, tolerance=args.tolerance,
+                                 rel_tolerance=args.rel_tolerance,
+                                 time_tolerance=args.time_tolerance)
+    regressions = [f for f in findings if f.severity == "regression"]
+    for f in findings:
+        stream = sys.stderr if f.severity == "regression" else sys.stdout
+        print(f, file=stream)
+    print(f"compare: {len(regressions)} regression(s), "
+          f"{sum(f.severity == 'warning' for f in findings)} warning(s) "
+          f"across {len(old.sections)} baseline section(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""Tiered section runner with per-section timeouts.
+
+Sections register themselves via :func:`register_section`; the runner
+executes the requested tier's sections in registration order, wraps each
+in a wall-clock budget (SIGALRM on the main thread — the whole suite is
+single-process CPU work), and assembles one :class:`BenchResult` artifact
+no matter which sections failed, timed out, or were skipped.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import signal
+import threading
+import time
+import traceback
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .schema import SCHEMA_VERSION, BenchCase, BenchResult, SectionResult
+
+
+class SkipSection(Exception):
+    """Raised by a section to mark itself skipped (with a reason)."""
+
+
+class SectionTimeout(BaseException):
+    """Section exceeded its wall-clock budget.
+
+    Deliberately a BaseException: sections that contain per-row failures
+    with a blanket ``except Exception`` (e.g. harvested micro-bench) must
+    not be able to swallow the runner's SIGALRM — the alarm is one-shot,
+    so a swallowed timeout would let the section run unbounded.
+    """
+
+
+@dataclasses.dataclass
+class BenchContext:
+    """Everything a section needs to run."""
+
+    tier: str                          # "quick" | "full"
+    cases: List[BenchCase]
+
+
+@dataclasses.dataclass
+class Section:
+    name: str
+    title: str
+    fn: Callable[[BenchContext], List[dict]]
+    tiers: tuple = ("quick", "full")
+    timeout_s: float = 300.0
+
+
+#: registration order == execution order
+SECTIONS: Dict[str, Section] = {}
+
+
+def register_section(name: str, title: Optional[str] = None,
+                     tiers: tuple = ("quick", "full"),
+                     timeout_s: float = 300.0):
+    def deco(fn):
+        SECTIONS[name] = Section(name=name, title=title or name, fn=fn,
+                                 tiers=tiers, timeout_s=timeout_s)
+        return fn
+    return deco
+
+
+@contextlib.contextmanager
+def _deadline(seconds: float):
+    """SIGALRM-based wall-clock budget; no-op off the main thread."""
+    if seconds <= 0 or threading.current_thread() is not threading.main_thread():
+        yield
+        return
+
+    def _raise(signum, frame):
+        raise SectionTimeout(f"exceeded {seconds:.0f}s budget")
+
+    prev = signal.signal(signal.SIGALRM, _raise)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, prev)
+
+
+def run_section(section: Section, ctx: BenchContext,
+                timeout_scale: float = 1.0) -> SectionResult:
+    t0 = time.perf_counter()
+    try:
+        with _deadline(section.timeout_s * timeout_scale):
+            rows = section.fn(ctx)
+        status, error = "ok", None
+    except SkipSection as e:
+        rows, status, error = [], "skipped", str(e)
+    except SectionTimeout as e:
+        rows, status, error = [], "timeout", str(e)
+    except Exception:
+        rows, status, error = [], "failed", traceback.format_exc(limit=8)
+    return SectionResult(name=section.name, title=section.title,
+                         status=status, wall_s=time.perf_counter() - t0,
+                         rows=rows, error=error)
+
+
+def run_bench(tier: str = "quick",
+              section_names: Optional[Sequence[str]] = None,
+              timeout_scale: float = 1.0,
+              progress: Optional[Callable[[str], None]] = None
+              ) -> BenchResult:
+    """Run every registered section of ``tier``; never raises per-section."""
+    import jax
+
+    from . import sections as _sections  # noqa: F401  (registers sections)
+    from .cases import CASES, clear_caches, tier_cases
+
+    if section_names:
+        unknown = sorted(set(section_names) - set(SECTIONS))
+        if unknown:
+            raise ValueError(f"unknown section(s) {unknown}; "
+                             f"known: {sorted(SECTIONS)}")
+
+    ctx = BenchContext(tier=tier, cases=tier_cases(tier))
+    todo = [s for s in SECTIONS.values()
+            if tier in s.tiers and (not section_names or
+                                    s.name in section_names)]
+    results: List[SectionResult] = []
+    try:
+        for s in todo:
+            if progress:
+                progress(f"=== {s.title} ===")
+            r = run_section(s, ctx, timeout_scale=timeout_scale)
+            if progress:
+                progress(f"[{s.name}: {r.status} in {r.wall_s:.1f}s]")
+            results.append(r)
+    finally:
+        # drop memoized params/profiles so a long-lived caller (or a
+        # second tier in the same process) doesn't hold the whole zoo
+        clear_caches()
+    return BenchResult(
+        tier=tier,
+        backend=jax.default_backend(),
+        jax_version=jax.__version__,
+        cases=list(ctx.cases),
+        sections=results,
+        meta={"n_devices": jax.device_count(),
+              "all_cases": [c.to_dict() for c in CASES]},
+        schema_version=SCHEMA_VERSION,
+    )

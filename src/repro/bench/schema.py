@@ -1,0 +1,262 @@
+"""Versioned artifact schema for the benchmark pipeline.
+
+A bench run serializes to ONE JSON document (``results/bench.json``)::
+
+    {
+      "schema_version": 1,
+      "tier": "quick" | "full",
+      "backend": "cpu",
+      "jax_version": "0.4.37",
+      "cases": [{"alias": ..., "arch": ..., "batch": ..., "seq": ...,
+                 "tiers": ["quick", "full"]}, ...],
+      "sections": [{"name": ..., "title": ..., "status": "ok" | "failed"
+                    | "timeout" | "skipped", "wall_s": ..., "rows": [...],
+                    "error": null | "..."}, ...],
+      "meta": {...}
+    }
+
+Rows are per-section records.  Share-bearing sections (``breakdown``,
+``opgroups``, ``top_table``) carry ``case``/``mode``/``gemm_frac``/
+``nongemm_frac`` per row — the numbers the paper is about, and the ones
+``repro.bench.compare`` gates on.  The validator is hand-rolled (no
+jsonschema dependency in the container) but strict about everything the
+compare CLI relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+#: section.status values
+STATUSES = ("ok", "failed", "timeout", "skipped")
+
+#: sections whose rows must carry GEMM/NonGEMM shares
+SHARE_SECTIONS = ("breakdown", "opgroups", "top_table")
+
+#: row keys required per known section (subset check; rows may carry more)
+SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
+    "breakdown": ("case", "mode", "total_s", "gemm_frac", "nongemm_frac",
+                  "group_fracs"),
+    "opgroups": ("case", "mode", "gemm_frac", "nongemm_frac", "group_fracs"),
+    "top_table": ("case", "mode", "top_group", "top_pct", "gemm_frac",
+                  "nongemm_frac"),
+    "micro": ("operator", "group", "shape", "jit_us", "tpu_model_us"),
+    "micro_harvested": ("operator", "group", "shape", "jit_us",
+                        "tpu_model_us"),
+    "kernels": ("site", "eager_mb", "xla_mb", "pallas_mb", "allclose"),
+    "roofline": ("arch", "shape", "mesh"),
+}
+
+
+class SchemaError(ValueError):
+    """Artifact failed schema validation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCase:
+    """One (model, batch, seq) point of the zoo, tagged with its tiers."""
+
+    alias: str
+    arch: str
+    batch: int
+    seq: int
+    tiers: tuple = ("quick", "full")
+
+    def __iter__(self):
+        # unpacks like the legacy (alias, arch, batch, seq) tuples
+        return iter((self.alias, self.arch, self.batch, self.seq))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tiers"] = list(self.tiers)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchCase":
+        return cls(alias=d["alias"], arch=d["arch"], batch=int(d["batch"]),
+                   seq=int(d["seq"]), tiers=tuple(d.get("tiers") or
+                                                  ("quick", "full")))
+
+
+@dataclasses.dataclass
+class SectionResult:
+    """One benchmark section's structured output."""
+
+    name: str
+    title: str
+    status: str                      # one of STATUSES
+    wall_s: float
+    rows: List[dict] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SectionResult":
+        return cls(name=d["name"], title=d.get("title", d["name"]),
+                   status=d["status"], wall_s=float(d.get("wall_s", 0.0)),
+                   rows=list(d.get("rows") or []), error=d.get("error"))
+
+
+@dataclasses.dataclass
+class BenchResult:
+    """The whole artifact: one bench run, every section, versioned."""
+
+    tier: str
+    backend: str
+    jax_version: str
+    cases: List[BenchCase] = dataclasses.field(default_factory=list)
+    sections: List[SectionResult] = dataclasses.field(default_factory=list)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+
+    # -- access helpers ----------------------------------------------------
+
+    def section(self, name: str) -> Optional[SectionResult]:
+        for s in self.sections:
+            if s.name == name:
+                return s
+        return None
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "schema_version": self.schema_version,
+            "tier": self.tier,
+            "backend": self.backend,
+            "jax_version": self.jax_version,
+            "cases": [c.to_dict() for c in self.cases],
+            "sections": [s.to_dict() for s in self.sections],
+            "meta": dict(self.meta),
+        }
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchResult":
+        errs = validate_artifact(d)
+        if errs:
+            raise SchemaError("; ".join(errs))
+        return cls(
+            tier=d["tier"], backend=d["backend"],
+            jax_version=d["jax_version"],
+            cases=[BenchCase.from_dict(c) for c in d.get("cases", [])],
+            sections=[SectionResult.from_dict(s) for s in d["sections"]],
+            meta=dict(d.get("meta") or {}),
+            schema_version=int(d["schema_version"]),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "BenchResult":
+        return cls.from_dict(json.loads(text))
+
+    def dump(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "BenchResult":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def _check_num(errs: list, where: str, row: dict, key: str) -> None:
+    v = row.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        errs.append(f"{where}: '{key}' must be a number, got {v!r}")
+
+
+def validate_artifact(d: Any) -> List[str]:
+    """Return a list of human-readable schema violations (empty == valid)."""
+    errs: List[str] = []
+    if not isinstance(d, dict):
+        return [f"artifact must be a JSON object, got {type(d).__name__}"]
+
+    sv = d.get("schema_version")
+    if not isinstance(sv, int):
+        errs.append("schema_version missing or not an int")
+    elif sv > SCHEMA_VERSION:
+        errs.append(f"schema_version {sv} is newer than supported "
+                    f"{SCHEMA_VERSION}")
+
+    for key in ("tier", "backend", "jax_version"):
+        if not isinstance(d.get(key), str):
+            errs.append(f"'{key}' missing or not a string")
+    if d.get("tier") not in (None, "quick", "full") and \
+            isinstance(d.get("tier"), str):
+        errs.append(f"tier must be 'quick' or 'full', got {d['tier']!r}")
+
+    cases = d.get("cases", [])
+    if not isinstance(cases, list):
+        errs.append("'cases' must be a list")
+        cases = []
+    for i, c in enumerate(cases):
+        if not isinstance(c, dict):
+            errs.append(f"cases[{i}] must be an object")
+            continue
+        for key in ("alias", "arch"):
+            if not isinstance(c.get(key), str):
+                errs.append(f"cases[{i}].{key} missing or not a string")
+        for key in ("batch", "seq"):
+            if not isinstance(c.get(key), int):
+                errs.append(f"cases[{i}].{key} missing or not an int")
+
+    sections = d.get("sections")
+    if not isinstance(sections, list) or not sections:
+        errs.append("'sections' missing, not a list, or empty")
+        sections = []
+    for i, s in enumerate(sections):
+        if not isinstance(s, dict):
+            errs.append(f"sections[{i}] must be an object")
+            continue
+        name = s.get("name")
+        where = f"sections[{i}]" + (f" ({name})" if name else "")
+        if not isinstance(name, str) or not name:
+            errs.append(f"{where}: 'name' missing or not a string")
+            name = ""
+        if s.get("status") not in STATUSES:
+            errs.append(f"{where}: status {s.get('status')!r} not in "
+                        f"{STATUSES}")
+        if not isinstance(s.get("wall_s"), (int, float)):
+            errs.append(f"{where}: 'wall_s' missing or not a number")
+        rows = s.get("rows", [])
+        if not isinstance(rows, list):
+            errs.append(f"{where}: 'rows' must be a list")
+            rows = []
+        if s.get("status") == "ok" and name in SECTION_ROW_KEYS:
+            required = SECTION_ROW_KEYS[name]
+            for j, row in enumerate(rows):
+                rwhere = f"{where}.rows[{j}]"
+                if not isinstance(row, dict):
+                    errs.append(f"{rwhere}: row must be an object")
+                    continue
+                for key in required:
+                    if key not in row:
+                        errs.append(f"{rwhere}: missing key '{key}'")
+                if name in SHARE_SECTIONS:
+                    for key in ("gemm_frac", "nongemm_frac"):
+                        if key in row:
+                            _check_num(errs, rwhere, row, key)
+                            v = row.get(key)
+                            if isinstance(v, (int, float)) and \
+                                    not isinstance(v, bool) and \
+                                    not -1e-6 <= v <= 1.0 + 1e-6:
+                                errs.append(f"{rwhere}: '{key}'={v} outside "
+                                            f"[0, 1]")
+    return errs

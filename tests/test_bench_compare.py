@@ -1,0 +1,151 @@
+"""Regression CLI: pass / fail / tolerance paths of repro.bench.compare."""
+
+import copy
+
+from repro.bench.compare import compare_artifacts, main
+from repro.bench.schema import BenchCase, BenchResult, SectionResult
+
+
+def make_artifact() -> BenchResult:
+    return BenchResult(
+        tier="quick",
+        backend="cpu",
+        jax_version="0.4.37",
+        cases=[BenchCase("gpt2-xl b-1", "gpt2-xl", 1, 16)],
+        sections=[
+            SectionResult(
+                name="breakdown", title="Fig 1", status="ok", wall_s=1.0,
+                rows=[
+                    {"case": "gpt2-xl b-1", "mode": "eager_cpu",
+                     "total_s": 0.01, "gemm_frac": 0.60,
+                     "nongemm_frac": 0.40, "group_fracs": {}, "n_ops": 10},
+                    {"case": "gpt2-xl b-1", "mode": "eager_a100",
+                     "total_s": 0.001, "gemm_frac": 0.45,
+                     "nongemm_frac": 0.55, "group_fracs": {}, "n_ops": 10},
+                ]),
+            SectionResult(
+                name="micro", title="Table 2", status="ok", wall_s=1.0,
+                rows=[{"operator": "rms_norm", "group": "normalization",
+                       "shape": [1, 10, 4096], "jit_us": 95.0,
+                       "tpu_model_us": 0.40}]),
+            SectionResult(
+                name="kernels", title="§4.5", status="ok", wall_s=1.0,
+                rows=[{"site": "swiglu", "eager_mb": 100.0, "xla_mb": 40.0,
+                       "pallas_mb": 38.0, "eager_over_pallas": 2.6,
+                       "xla_over_pallas": 1.05, "allclose": True}]),
+        ],
+    )
+
+
+def regressions(old, new, **kw):
+    return [f for f in compare_artifacts(old, new, **kw)
+            if f.severity == "regression"]
+
+
+def test_identical_artifacts_pass():
+    a = make_artifact()
+    assert regressions(a, copy.deepcopy(a)) == []
+
+
+def test_share_within_tolerance_passes():
+    old, new = make_artifact(), make_artifact()
+    new.section("breakdown").rows[0]["nongemm_frac"] = 0.43  # |Δ| = 0.03
+    new.section("breakdown").rows[0]["gemm_frac"] = 0.57
+    assert regressions(old, new, tolerance=0.05) == []
+    # same delta fails a tighter gate
+    assert regressions(old, new, tolerance=0.01)
+
+
+def test_share_beyond_tolerance_fails():
+    old, new = make_artifact(), make_artifact()
+    new.section("breakdown").rows[1]["nongemm_frac"] = 0.70  # |Δ| = 0.15
+    found = regressions(old, new, tolerance=0.05)
+    assert found and "nongemm_frac" in found[0].message
+
+
+def test_missing_row_is_regression():
+    old, new = make_artifact(), make_artifact()
+    new.section("breakdown").rows.pop()
+    assert any("missing" in f.message for f in regressions(old, new))
+
+
+def test_extra_row_is_not_regression():
+    old, new = make_artifact(), make_artifact()
+    new.section("breakdown").rows.append(
+        {"case": "llama2-7b b-1", "mode": "eager_cpu", "total_s": 0.02,
+         "gemm_frac": 0.5, "nongemm_frac": 0.5, "group_fracs": {},
+         "n_ops": 9})
+    assert regressions(old, new) == []
+
+
+def test_section_failure_is_regression():
+    old, new = make_artifact(), make_artifact()
+    sec = new.section("kernels")
+    sec.status, sec.rows, sec.error = "failed", [], "boom"
+    assert any("ok -> failed" in f.message for f in regressions(old, new))
+
+
+def test_missing_section_is_regression():
+    old, new = make_artifact(), make_artifact()
+    new.sections = [s for s in new.sections if s.name != "micro"]
+    assert any(f.where == "section micro" for f in regressions(old, new))
+
+
+def test_allclose_flip_is_regression_regardless_of_tolerance():
+    old, new = make_artifact(), make_artifact()
+    new.section("kernels").rows[0]["allclose"] = False
+    assert regressions(old, new, tolerance=1.0, rel_tolerance=1e9)
+
+
+def test_modeled_number_gated_by_rel_tolerance():
+    old, new = make_artifact(), make_artifact()
+    new.section("micro").rows[0]["tpu_model_us"] = 0.50  # +25%
+    assert regressions(old, new, rel_tolerance=0.15)
+    assert regressions(old, new, rel_tolerance=0.30) == []
+
+
+def test_measured_time_unchecked_by_default():
+    old, new = make_artifact(), make_artifact()
+    new.section("micro").rows[0]["jit_us"] = 5000.0  # 50x slower
+    assert regressions(old, new) == []
+    assert regressions(old, new, time_tolerance=3.0)
+    # faster is never a regression
+    new.section("micro").rows[0]["jit_us"] = 1.0
+    assert regressions(old, new, time_tolerance=3.0) == []
+
+
+def test_section_wall_clock_gated_only_with_time_tolerance():
+    old, new = make_artifact(), make_artifact()
+    new.section("micro").wall_s = 100.0  # baseline 1.0s -> 100x
+    assert regressions(old, new) == []
+    found = regressions(old, new, time_tolerance=3.0)
+    assert found and "wall_s" in found[0].message
+
+
+def test_unmeasured_eager_us_baseline_not_flagged():
+    # eager_us == 0 in a quick-tier baseline means "not measured"
+    old, new = make_artifact(), make_artifact()
+    old.section("micro").rows[0]["eager_us"] = 0.0
+    new.section("micro").rows[0]["eager_us"] = 800.0
+    assert regressions(old, new, time_tolerance=3.0) == []
+    old.section("micro").rows[0]["eager_us"] = 10.0  # measured: gated
+    assert regressions(old, new, time_tolerance=3.0)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    old, new = make_artifact(), make_artifact()
+    old_p, new_p = str(tmp_path / "old.json"), str(tmp_path / "new.json")
+    old.dump(old_p)
+    new.dump(new_p)
+    assert main([old_p, new_p]) == 0
+
+    new.section("breakdown").rows[1]["nongemm_frac"] = 0.95
+    new.dump(new_p)
+    assert main([old_p, new_p]) == 1
+    assert main([old_p, new_p, "--tolerance", "0.9"]) == 0
+    capsys.readouterr()
+
+    assert main([old_p, str(tmp_path / "nope.json")]) == 2
+    (tmp_path / "broken.json").write_text("{\"schema_version\": 1}")
+    assert main([old_p, str(tmp_path / "broken.json")]) == 2
+    capsys.readouterr()

@@ -1,0 +1,58 @@
+"""Runner: per-section timeout, skip, and failure containment."""
+
+import time
+
+from repro.bench.runner import (BenchContext, Section, SectionTimeout,
+                                SkipSection, run_section)
+
+
+def ctx():
+    return BenchContext(tier="quick", cases=[])
+
+
+def test_ok_section():
+    sec = Section(name="s", title="t", fn=lambda c: [{"a": 1}])
+    r = run_section(sec, ctx())
+    assert r.status == "ok" and r.rows == [{"a": 1}] and r.error is None
+    assert r.wall_s >= 0.0
+
+
+def test_failed_section_is_contained():
+    def boom(c):
+        raise RuntimeError("kaput")
+
+    r = run_section(Section(name="s", title="t", fn=boom), ctx())
+    assert r.status == "failed" and r.rows == []
+    assert "kaput" in r.error
+
+
+def test_skip_section():
+    def skip(c):
+        raise SkipSection("nothing to do")
+
+    r = run_section(Section(name="s", title="t", fn=skip), ctx())
+    assert r.status == "skipped" and r.error == "nothing to do"
+
+
+def test_timeout_fires_and_is_cleared():
+    def slow(c):
+        time.sleep(5)
+        return []
+
+    sec = Section(name="s", title="t", fn=slow, timeout_s=0.2)
+    t0 = time.perf_counter()
+    r = run_section(sec, ctx())
+    assert r.status == "timeout"
+    assert time.perf_counter() - t0 < 3.0
+    # the alarm must not linger past the section
+    time.sleep(0.3)
+
+
+def test_timeout_scale():
+    def quickish(c):
+        time.sleep(0.3)
+        return [{"ok": True}]
+
+    sec = Section(name="s", title="t", fn=quickish, timeout_s=0.1)
+    assert run_section(sec, ctx()).status == "timeout"
+    assert run_section(sec, ctx(), timeout_scale=10.0).status == "ok"

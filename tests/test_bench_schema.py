@@ -1,0 +1,115 @@
+"""Artifact schema: JSON round-trip, validation, renderer contract."""
+
+import json
+
+import pytest
+
+from repro.bench.schema import (SCHEMA_VERSION, BenchCase, BenchResult,
+                                SectionResult, SchemaError,
+                                validate_artifact)
+
+
+def make_result() -> BenchResult:
+    return BenchResult(
+        tier="quick",
+        backend="cpu",
+        jax_version="0.4.37",
+        cases=[BenchCase("gpt2-xl b-1", "gpt2-xl", 1, 16, ("quick", "full")),
+               BenchCase("bert b-1", "bert-base", 1, 128, ("full",))],
+        sections=[
+            SectionResult(
+                name="breakdown", title="Fig 1", status="ok", wall_s=1.5,
+                rows=[{"case": "gpt2-xl b-1", "mode": "eager_cpu",
+                       "total_s": 0.01, "gemm_frac": 0.62,
+                       "nongemm_frac": 0.38,
+                       "group_fracs": {"gemm": 0.62, "normalization": 0.2},
+                       "n_ops": 123}]),
+            SectionResult(
+                name="kernels", title="§4.5", status="ok", wall_s=2.0,
+                rows=[{"site": "rms_norm", "eager_mb": 50.3, "xla_mb": 17.0,
+                       "pallas_mb": 16.8, "eager_over_pallas": 3.0,
+                       "xla_over_pallas": 1.01, "allclose": True}]),
+            SectionResult(name="roofline", title="roofline",
+                          status="skipped", wall_s=0.0,
+                          error="no dry-run artifacts"),
+        ],
+        meta={"n_devices": 1},
+    )
+
+
+def test_roundtrip_through_json():
+    r = make_result()
+    text = r.to_json()
+    back = BenchResult.from_json(text)
+    assert back == r
+    # and the dict form is plain JSON types all the way down
+    assert json.loads(text) == r.to_dict()
+
+
+def test_dump_and_load(tmp_path):
+    path = str(tmp_path / "sub" / "bench.json")
+    r = make_result()
+    r.dump(path)
+    assert BenchResult.load(path) == r
+
+
+def test_valid_artifact_has_no_errors():
+    assert validate_artifact(make_result().to_dict()) == []
+
+
+def test_section_lookup():
+    r = make_result()
+    assert r.section("kernels").rows[0]["site"] == "rms_norm"
+    assert r.section("nope") is None
+
+
+def test_case_unpacks_like_legacy_tuple():
+    alias, arch, batch, seq = BenchCase("a", "gpt2-xl", 2, 16)
+    assert (alias, arch, batch, seq) == ("a", "gpt2-xl", 2, 16)
+
+
+@pytest.mark.parametrize("mutate,fragment", [
+    (lambda d: d.pop("schema_version"), "schema_version"),
+    (lambda d: d.update(schema_version=SCHEMA_VERSION + 1), "newer"),
+    (lambda d: d.update(tier=7), "'tier'"),
+    (lambda d: d.update(tier="warp"), "tier must be"),
+    (lambda d: d.update(sections=[]), "sections"),
+    (lambda d: d["sections"][0].update(status="exploded"), "status"),
+    (lambda d: d["sections"][0].pop("wall_s"), "wall_s"),
+    (lambda d: d["sections"][0]["rows"][0].pop("nongemm_frac"),
+     "nongemm_frac"),
+    (lambda d: d["sections"][0]["rows"][0].update(nongemm_frac="big"),
+     "number"),
+    (lambda d: d["sections"][0]["rows"][0].update(nongemm_frac=1.7),
+     "outside"),
+    (lambda d: d["sections"][1]["rows"][0].pop("allclose"), "allclose"),
+    (lambda d: d["cases"][0].pop("arch"), "arch"),
+])
+def test_validator_catches(mutate, fragment):
+    d = make_result().to_dict()
+    mutate(d)
+    errs = validate_artifact(d)
+    assert errs and any(fragment in e for e in errs), errs
+
+
+def test_from_dict_raises_schema_error():
+    d = make_result().to_dict()
+    d["sections"] = []
+    with pytest.raises(SchemaError):
+        BenchResult.from_dict(d)
+
+
+def test_skipped_section_rows_not_key_checked():
+    # a skipped/failed section carries no rows and must still validate
+    d = make_result().to_dict()
+    assert d["sections"][2]["status"] == "skipped"
+    assert validate_artifact(d) == []
+
+
+def test_renderers_accept_artifact_dict():
+    from repro.core.report import render_artifact, render_section
+
+    d = make_result().to_dict()
+    text = render_artifact(d)
+    assert "gpt2-xl b-1" in text and "rms_norm" in text
+    assert "skipped" in render_section(d["sections"][2])

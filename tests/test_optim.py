@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis dev extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import (OptimizerConfig, adamw_update, apply_error_feedback,

@@ -11,8 +11,10 @@ from repro import sharding as sh
 from repro.configs import get_config, reduced
 from repro.models import init_lm
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# keyword-free (axis-name, size) pair form — the only constructor shape
+# current JAX accepts (positional dims + names raises TypeError)
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+POD = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_spec_for_basic_tp():
