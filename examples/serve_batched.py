@@ -1,10 +1,14 @@
-"""Batched serving example: prefill + decode with the KV-cache Engine.
+"""Continuous-batching serving example: per-slot positions over one cache.
 
     PYTHONPATH=src python examples/serve_batched.py [arch]
 
-Fills a request queue with mixed-length prompts, packs them into fixed
-batches (static shapes: pad the batch, not the program), and decodes with
-per-sequence completion tracking. Prints per-phase throughput.
+Fills a request queue with mixed-length prompts and lets the Engine stream
+them through a fixed slot table (static shapes: pad the batch, not the
+program): each request is prefilled alone (right-padded to a bucket) and
+spliced into a free slot of the shared KV cache, every decode step advances
+all live slots at their own positions, and a finished slot is refilled from
+the queue without draining the batch. Prints per-phase throughput and
+per-request latency stats (TTFT / queue wait / per-token decode latency).
 """
 
 import sys
@@ -31,11 +35,16 @@ def main(arch: str = "stablelm-3b") -> None:
     done = eng.run()
     for r in done[:5]:
         print(f"req {r.uid:>2}  prompt[{len(r.prompt):>2}] -> "
-              f"{len(r.output):>2} tokens: {r.output[:10]}")
+              f"{len(r.output):>2} tokens  ttft {r.ttft_s*1e3:6.1f}ms  "
+              f"queue {r.queue_wait_s*1e3:6.1f}ms: {r.output[:10]}")
     s = eng.stats
-    print(f"\nserved {len(done)} requests | prefill {s.prefill_s:.2f}s "
+    print(f"\nserved {s.completed} requests | prefill {s.prefill_s:.2f}s "
           f"({s.prefill_tokens} tok) | decode {s.decode_s:.2f}s "
-          f"({s.decode_tokens} tok, {s.decode_tok_per_s:.1f} tok/s)")
+          f"({s.decode_tokens} tok, {s.decode_tok_per_s:.1f} tok/s, "
+          f"{s.decode_steps} steps) | first tokens {s.first_tokens} | "
+          f"mean TTFT {s.mean_ttft_s*1e3:.1f}ms | "
+          f"mean queue wait {s.mean_queue_wait_s*1e3:.1f}ms | "
+          f"mean decode tok latency {s.mean_decode_tok_latency_s*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

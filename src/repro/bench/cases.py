@@ -33,6 +33,12 @@ from .schema import BenchCase
 _Q = ("quick", "full")
 _F = ("full",)
 
+#: serving-engine cases: (alias, arch, max_batch, max_len) — the batch is
+#: the engine slot-table size, the seq is the shared KV-cache depth
+SERVING_CASES: List[BenchCase] = [
+    BenchCase("serve stablelm b-4", "stablelm-3b", 4, 64, _Q),
+]
+
 #: the zoo — quick tier is the CI subset, full is the paper zoo
 CASES: List[BenchCase] = [
     BenchCase("gpt2-xl b-1", "gpt2-xl", 1, 16, _Q),
@@ -107,6 +113,22 @@ def build(arch: str, batch: int, seq: int):
     return fwd, params, inputs
 
 
+def serving_config(arch: str):
+    """Tiny same-family config the serving section can execute on CPU."""
+    from repro.configs import get_config as _get, reduced
+    cfg = reduced(_get(arch))
+    return cfg.replace(n_layers=min(cfg.n_layers, 2), loss_chunk=0)
+
+
+@functools.lru_cache(maxsize=None)
+def build_serving(arch: str):
+    """(cfg, params) for the serving-engine bench case (memoized: the
+    section runs the engine and profiles prefill/decode on one model)."""
+    cfg = serving_config(arch)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
 @functools.lru_cache(maxsize=None)
 def profile_case(alias: str, arch: str, batch: int, seq: int,
                  eager_repeats: int = 3) -> Tuple[ModelProfile, ModelProfile]:
@@ -137,3 +159,4 @@ def clear_caches() -> None:
     profile_case.cache_clear()
     profile_case_compiled.cache_clear()
     build.cache_clear()
+    build_serving.cache_clear()

@@ -62,6 +62,7 @@ ROW_KEYS = {
     "micro_harvested": ("operator", "shape"),
     "kernels": ("site",),
     "roofline": ("arch", "shape", "mesh", "label", "model"),
+    "serving": ("case", "phase"),
 }
 
 

@@ -16,9 +16,9 @@ A bench run serializes to ONE JSON document (``results/bench.json``)::
     }
 
 Rows are per-section records.  Share-bearing sections (``breakdown``,
-``opgroups``, ``top_table``) carry ``case``/``mode``/``gemm_frac``/
-``nongemm_frac`` per row — the numbers the paper is about, and the ones
-``repro.bench.compare`` gates on.  The validator is hand-rolled (no
+``opgroups``, ``top_table``, and the ``serving`` prefill/decode phase rows)
+carry ``case``/``mode``/``gemm_frac``/``nongemm_frac`` per row — the
+numbers the paper is about, and the ones ``repro.bench.compare`` gates on.  The validator is hand-rolled (no
 jsonschema dependency in the container) but strict about everything the
 compare CLI relies on.
 """
@@ -35,8 +35,9 @@ SCHEMA_VERSION = 1
 #: section.status values
 STATUSES = ("ok", "failed", "timeout", "skipped")
 
-#: sections whose rows must carry GEMM/NonGEMM shares
-SHARE_SECTIONS = ("breakdown", "opgroups", "top_table")
+#: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
+#: present; the serving section's "engine" rows carry throughput instead)
+SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving")
 
 #: row keys required per known section (subset check; rows may carry more)
 SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
@@ -50,6 +51,7 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
                         "tpu_model_us"),
     "kernels": ("site", "eager_mb", "xla_mb", "pallas_mb", "allclose"),
     "roofline": ("arch", "shape", "mesh"),
+    "serving": ("case", "phase"),
 }
 
 

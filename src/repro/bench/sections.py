@@ -16,7 +16,8 @@ from typing import List, Sequence
 from repro.core.microbench import TABLE2_SHAPES, run_micro
 from repro.core.report import profile_row
 
-from .cases import build, profile_case, profile_case_compiled
+from .cases import (SERVING_CASES, build, build_serving, profile_case,
+                    profile_case_compiled, tier_cases)
 from .runner import BenchContext, SkipSection, register_section
 from .schema import BenchCase
 
@@ -287,6 +288,99 @@ def section_kernels(ctx: BenchContext) -> List[dict]:
             "xla_over_pallas": xla_b / io_b if io_b else 0.0,
             "allclose": bool(check()),
         })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §Serving — continuous-batching engine: throughput + phase GEMM/NonGEMM split
+# ---------------------------------------------------------------------------
+
+def serving_rows(case: BenchCase, requests: int = 6,
+                 max_new_tokens: int = 5) -> List[dict]:
+    """Three row kinds per serving case:
+
+    * ``phase="engine"`` — measured continuous-batching throughput and
+      latency stats (TTFT, queue wait, per-token decode latency) from a
+      real engine run over mixed-length prompts;
+    * ``phase="prefill"`` / ``phase="decode"`` — the paper's
+      GEMM/NonGEMM split of the two serving programs, from the existing
+      accelerated-eager profiler (per-op roofline model, no fusion) on the
+      exact functions the engine jits (vectorized per-slot ``pos``).
+    """
+    import numpy as np
+
+    from repro.models import init_lm_cache, lm_decode, lm_prefill
+    from repro.serving import Engine
+
+    alias, arch, max_batch, max_len = case
+    cfg, params = build_serving(arch)
+
+    eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len)
+    rng = np.random.RandomState(0)
+    for _ in range(requests):
+        plen = int(rng.randint(3, 17))
+        prompt = rng.randint(1, cfg.vocab_size, size=plen).tolist()
+        eng.add_request(prompt, max_new_tokens=max_new_tokens)
+    done = eng.run()
+    s = eng.stats
+    rows = [{
+        "case": alias, "mode": "engine_measured", "phase": "engine",
+        "requests": len(done),
+        "prefill_tokens": s.prefill_tokens,
+        "decode_tokens": s.decode_tokens,
+        "first_tokens": s.first_tokens,
+        "decode_steps": s.decode_steps,
+        "decode_tok_per_s": s.decode_tok_per_s,
+        "mean_ttft_s": s.mean_ttft_s,
+        "mean_queue_wait_s": s.mean_queue_wait_s,
+        "mean_decode_tok_latency_s": s.mean_decode_tok_latency_s,
+    }]
+
+    # GEMM/NonGEMM split of the two engine programs (modeled eager-A100,
+    # the paper's accelerated setting — where NonGEMM shares peak)
+    from repro.core import profile_accelerated_eager
+
+    import jax
+    import jax.numpy as jnp
+
+    bucket = 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, bucket), 1,
+                              cfg.vocab_size)
+    lengths = jnp.full((1,), bucket - 3, jnp.int32)
+
+    def prefill_fn(params, toks, lengths):
+        return lm_prefill(params, toks, cfg, max_len=max_len,
+                          lengths=lengths)[0]
+
+    caches = init_lm_cache(cfg, max_batch, max_len)
+    token = jnp.ones((max_batch,), jnp.int32)
+    pos = jnp.arange(4, 4 + max_batch, dtype=jnp.int32)  # per-slot depths
+
+    def decode_fn(params, token, pos, caches):
+        return lm_decode(params, token, pos, caches, cfg)[0]
+
+    for phase, fn, args in (
+            ("prefill", prefill_fn, (params, toks, lengths)),
+            ("decode", decode_fn, (params, token, pos, caches))):
+        p = profile_accelerated_eager(fn, *args, name=alias)
+        row = profile_row(p)
+        row["phase"] = phase
+        rows.append(row)
+    return rows
+
+
+@register_section(
+    "serving",
+    title="§Serving — continuous-batching engine throughput + "
+          "prefill/decode GEMM vs NonGEMM split",
+    timeout_s=300.0)
+def section_serving(ctx: BenchContext) -> List[dict]:
+    cases = tier_cases(ctx.tier, SERVING_CASES)
+    if not cases:
+        raise SkipSection(f"no serving cases in tier {ctx.tier!r}")
+    rows: List[dict] = []
+    for c in cases:
+        rows += serving_rows(c)
     return rows
 
 

@@ -216,6 +216,28 @@ def render_roofline_rows(rows: Iterable[dict]) -> str:
     return buf.getvalue()
 
 
+def render_serving_rows(rows: Iterable[dict]) -> str:
+    """Serving section: one engine-throughput line per case plus the
+    prefill/decode GEMM-vs-NonGEMM split lines."""
+    buf = io.StringIO()
+    for r in rows:
+        if r.get("phase") == "engine":
+            buf.write(
+                f"{r['case']:<28} engine    "
+                f"reqs {r['requests']:>3}  "
+                f"decode {r['decode_tok_per_s']:>8.1f} tok/s  "
+                f"TTFT {r['mean_ttft_s']*1e3:>8.1f}ms  "
+                f"queue {r['mean_queue_wait_s']*1e3:>8.1f}ms  "
+                f"tok-lat {r['mean_decode_tok_latency_s']*1e3:>7.1f}ms\n")
+        else:
+            buf.write(
+                f"{r['case']:<28} {r.get('phase', '?'):<9} "
+                f"{r.get('mode', ''):<22} "
+                f"GEMM {_fmt_pct(r['gemm_frac'])}  "
+                f"NonGEMM {_fmt_pct(r['nongemm_frac'])}\n")
+    return buf.getvalue()
+
+
 #: section name -> row renderer
 SECTION_RENDERERS = {
     "breakdown": render_breakdown_rows,
@@ -225,6 +247,7 @@ SECTION_RENDERERS = {
     "micro_harvested": render_micro_rows,
     "kernels": render_kernel_rows,
     "roofline": render_roofline_rows,
+    "serving": render_serving_rows,
 }
 
 

@@ -132,13 +132,15 @@ _reg(
     "log1p", "expm1", "sqrt", "cbrt", "square", "and", "or", "xor", "not",
     "select_n", "clamp", "nextafter", "is_finite", "eq", "ne", "lt", "le",
     "gt", "ge", "atan2", "sin", "cos", "real", "imag", "complex", "conj",
-    "stop_gradient", "cumsum", "cumprod",
+    "stop_gradient",
 )
 _reg(
     OpGroup.REDUCTION,
+    # the whole cum* family lives here, matching the module doc: a scan
+    # over a reduction operator is a reduction, not element-wise work
     "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
-    "reduce_or", "argmax", "argmin", "reduce_precision", "cummax", "cummin",
-    "cumlogsumexp", "top_k", "sort",
+    "reduce_or", "argmax", "argmin", "reduce_precision", "cumsum", "cumprod",
+    "cummax", "cummin", "cumlogsumexp", "top_k", "sort",
 )
 _reg(
     OpGroup.COLLECTIVE,

@@ -158,7 +158,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         jitted = jax.jit(step, in_shardings=(params_sh, tok_sh))
         lowered = jitted.lower(params, specs["tokens"])
         extra = {}
-    else:  # decode
+    else:  # decode: serve_step with the engine's per-slot pos vector (B,)
         specs = input_specs(cfg, shape, mesh)
         params = abstract_state(cfg).params
         params_sh = sharding.param_sharding(params, mesh, cfg.fsdp)

@@ -1,4 +1,4 @@
-"""Serving driver: batched prefill + decode with the Engine.
+"""Serving driver: continuous-batching Engine over one shared KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --reduced --requests 12 --max-new 16
@@ -42,10 +42,13 @@ def main() -> int:
         eng.add_request(prompt, max_new_tokens=args.max_new)
     done = eng.run()
     for r in done[:4]:
-        print(f"req {r.uid}: prompt[{len(r.prompt)}] -> {r.output}")
+        print(f"req {r.uid}: prompt[{len(r.prompt)}] "
+              f"ttft={r.ttft_s*1e3:.1f}ms -> {r.output}")
     s = eng.stats
     print(f"requests={len(done)} prefill={s.prefill_s:.2f}s "
-          f"decode={s.decode_s:.2f}s decode_tok/s={s.decode_tok_per_s:.1f}")
+          f"decode={s.decode_s:.2f}s decode_tok/s={s.decode_tok_per_s:.1f} "
+          f"mean_ttft={s.mean_ttft_s*1e3:.1f}ms "
+          f"mean_queue_wait={s.mean_queue_wait_s*1e3:.1f}ms")
     return 0
 
 

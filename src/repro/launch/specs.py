@@ -57,7 +57,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None,
     train:   {"inputs": (B, S)[xV], "labels": (B, S)} — microbatched to
              (n_micro, B/n_micro, S) when num_microbatches > 1
     prefill: {"tokens": (B, S)}
-    decode:  {"token": (B,), "pos": (), "caches": <seq_len-deep cache>}
+    decode:  {"token": (B,), "pos": (B,), "caches": <seq_len-deep cache>}
+             (``pos`` is the continuous-batching engine's per-slot position
+             vector — the shape the production serve_step actually runs)
     """
     b, s = shape.global_batch, shape.seq_len
     tok_dt = jnp.int32
@@ -83,11 +85,11 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None,
     if shape.kind == "prefill":
         return {"tokens": tok_spec(b, s)}
 
-    # decode: one new token against a seq_len-deep cache
+    # decode: one new token per slot against a seq_len-deep cache
     token = (sds((b,), tok_dt) if cfg.input_mode == "tokens"
              else sds((b, cfg.d_model), cfg.dtype))
     caches = abstract_caches(cfg, b, s)
-    return {"token": token, "pos": sds((), jnp.int32), "caches": caches,
+    return {"token": token, "pos": sds((b,), jnp.int32), "caches": caches,
             "key": sds((2,), jnp.uint32)}
 
 

@@ -30,6 +30,20 @@ from repro.models.common import ModelConfig, dense_init
 NEG_INF = -1e30
 
 
+def pos_vector(pos, batch: int):
+    """Normalize a decode position to a per-row ``(B,)`` int32 vector.
+
+    Scalar ``pos`` (all rows in lockstep) broadcasts; a ``(B,)`` vector
+    (continuous batching: each slot at its own depth) passes through.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (batch,))
+    if pos.shape != (batch,):
+        raise ValueError(f"pos must be scalar or ({batch},), got {pos.shape}")
+    return pos
+
+
 def _softcap(s, cap: Optional[float]):
     if cap is None:
         return s
@@ -441,7 +455,9 @@ def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
         return {
             "k": jnp.zeros((batch, w, hkv, hd), dt),
             "v": jnp.zeros((batch, w, hkv, hd), dt),
-            "pos": jnp.full((w,), -1, jnp.int32),
+            # per-row position side-car: under continuous batching each
+            # slot's ring buffer is at its own depth
+            "pos": jnp.full((batch, w), -1, jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, max_len, hkv, hd), dt),
@@ -450,12 +466,18 @@ def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
 
 
 def attn_prefill(params, x, cfg: ModelConfig, kind: str, positions,
-                 max_len: int) -> Tuple[jax.Array, dict]:
+                 max_len: int, lengths=None) -> Tuple[jax.Array, dict]:
     """Full-sequence forward that also materializes the decode cache.
 
     x: (B, S, D) with S <= max_len. The returned cache matches
     :func:`init_attn_cache` layout exactly so ``attn_decode`` continues from
-    position S.
+    position S (or from each row's true ``lengths`` under right-padding).
+
+    ``lengths`` (B,) optional true prompt lengths of a right-padded batch.
+    The full-cache branch ignores it (pad KV beyond a row's length is never
+    attended: decode masks ``arange <= pos`` per row and overwrites pads in
+    place), but the ring buffer MUST fill from the true prompt tail — the
+    padded tail would otherwise evict in-window real KV with masked pads.
     """
     b, s, _ = x.shape
     q, k, v = _qkv(params, x, cfg, positions)
@@ -466,14 +488,18 @@ def attn_prefill(params, x, cfg: ModelConfig, kind: str, positions,
     cache = init_attn_cache(cfg, kind, b, max_len)
     if kind == "local":
         w = cache["k"].shape[1]
-        t = min(w, s)
-        # last t tokens land at slot = position % w (ring-buffer layout)
-        pos_tail = jnp.arange(s - t, s)
-        slots = jnp.mod(pos_tail, w)
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)
+        # ring slot j holds the last real position p ≡ j (mod w) — the
+        # true prompt tail per row, independent of right-padding
+        j = jnp.arange(w)
+        p = (lengths[:, None] - 1) - jnp.mod(lengths[:, None] - 1 - j, w)
+        idx = jnp.maximum(p, 0)[:, :, None, None]           # (B, w, 1, 1)
         cache = {
-            "k": cache["k"].at[:, slots].set(k[:, s - t:].astype(cache["k"].dtype)),
-            "v": cache["v"].at[:, slots].set(v[:, s - t:].astype(cache["v"].dtype)),
-            "pos": cache["pos"].at[slots].set(pos_tail.astype(jnp.int32)),
+            "k": jnp.take_along_axis(k, idx, axis=1).astype(cache["k"].dtype),
+            "v": jnp.take_along_axis(v, idx, axis=1).astype(cache["v"].dtype),
+            "pos": jnp.where(p >= 0, p, -1).astype(jnp.int32),
         }
     else:
         cache = {
@@ -487,27 +513,31 @@ def attn_prefill(params, x, cfg: ModelConfig, kind: str, positions,
 
 def attn_decode(params, x, cfg: ModelConfig, kind: str, cache: dict,
                 pos) -> Tuple[jax.Array, dict]:
-    """One-token decode. x: (B, 1, D); pos: scalar int32 current position."""
+    """One-token decode. x: (B, 1, D); pos: scalar int32 or per-row (B,)."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     g = hq // hkv
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = pos_vector(pos, b)
+    positions = pos[:, None]
     q, k_new, v_new = _qkv(params, x, cfg, positions)
 
     if kind == "local":
         w = cache["k"].shape[1]
         slot = jnp.mod(pos, w)
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
-        cpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
-        valid = (cpos >= 0) & (cpos <= pos) & (pos - cpos < w)
+        kv_write = jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                c, n, i, axis=0))
+        k = kv_write(cache["k"], k_new.astype(cache["k"].dtype), slot)
+        v = kv_write(cache["v"], v_new.astype(cache["v"].dtype), slot)
+        cpos = kv_write(cache["pos"], pos[:, None], slot)
+        valid = (cpos >= 0) & (cpos <= pos[:, None]) \
+            & (pos[:, None] - cpos < w)
         new_cache = {"k": k, "v": v, "pos": cpos}
     else:
         k = nn.kv_cache_update(cache["k"], k_new, pos)
         v = nn.kv_cache_update(cache["v"], v_new, pos)
         t = k.shape[1]
-        valid = jnp.arange(t) <= pos
+        valid = jnp.arange(t)[None, :] <= pos[:, None]
         new_cache = {"k": k, "v": v}
 
     scale = 1.0 / math.sqrt(hd)
@@ -519,7 +549,7 @@ def attn_decode(params, x, cfg: ModelConfig, kind: str, cache: dict,
         s = jnp.einsum("bkgd,btkd->bkgt", qh, k,
                        preferred_element_type=jnp.float32) * scale
     s = _softcap(s, cfg.attn_logit_softcap)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = nn.softmax(s, axis=-1)
     with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_pv")):
         o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
@@ -611,10 +641,14 @@ def mla_prefill(params, x, cfg: ModelConfig, positions,
 
 
 def mla_decode(params, x, cfg: ModelConfig, cache: dict, pos):
-    """Absorbed-projection MLA decode: attends in the 512-d latent space."""
+    """Absorbed-projection MLA decode: attends in the 512-d latent space.
+
+    ``pos`` is a scalar or a per-row ``(B,)`` vector (continuous batching).
+    """
     b = x.shape[0]
     h, vd = cfg.n_heads, cfg.v_head_dim
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = pos_vector(pos, b)
+    positions = pos[:, None]
     q_nope, q_rope = _mla_q(params, x, cfg, positions)   # (B,1,H,*)
     c_new, kr_new = _mla_ckv(params, x, cfg, positions)
     c = nn.kv_cache_update(cache["c"], c_new, pos)
@@ -629,8 +663,8 @@ def mla_decode(params, x, cfg: ModelConfig, cache: dict, pos):
                         preferred_element_type=jnp.float32) +
              jnp.einsum("bqhp,btp->bhqt", q_rope, kr,
                         preferred_element_type=jnp.float32)) * scale
-    valid = jnp.arange(t) <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = jnp.arange(t)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = nn.softmax(s, axis=-1)
     with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_pv")):
         ctx = jnp.einsum("bhqt,btr->bqhr", p.astype(c.dtype), c,

@@ -14,8 +14,14 @@ Public API (all pure functions over a params pytree):
     lm_forward(params, tokens, cfg)         -> logits (B, S, V)
     lm_loss(params, batch, cfg)             -> (loss, metrics)
     init_lm_cache(cfg, batch, max_len)      -> caches
-    lm_prefill(params, tokens, cfg, max_len)-> (last_logits, caches)
+    lm_prefill(params, tokens, cfg, max_len, lengths=None)
+                                            -> (last_logits, caches)
     lm_decode(params, token, pos, caches, cfg) -> (logits, caches)
+
+``pos`` may be a scalar (a freshly prefilled batch decoding in lockstep) or
+a per-row ``(B,)`` vector — the continuous-batching engine keeps every slot
+at its own absolute position.  ``lengths`` lets a right-padded prefill read
+its last-token logits at each row's true prompt end instead of the pad tail.
 """
 
 from __future__ import annotations
@@ -160,8 +166,15 @@ def block_forward(params, x, cfg: ModelConfig, kind: str, positions,
 
 
 def block_prefill(params, x, cfg: ModelConfig, kind: str, positions,
-                  max_len: int, moe_layer: bool):
-    """Like block_forward but also emits the decode cache for this block."""
+                  max_len: int, moe_layer: bool, lengths=None):
+    """Like block_forward but also emits the decode cache for this block.
+
+    ``lengths`` only matters to mixers whose cache layout depends on the
+    true prompt end under right-padding (the local-attention ring buffer).
+    Recurrent/xLSTM prefill carries a running state that consumes every
+    input token, so those mixers are NOT pad-safe — callers must feed them
+    exact-length prompts (the serving engine does).
+    """
     aux = jnp.zeros((), jnp.float32)
     h = _apply_norm(params["norm1"], x, cfg)
     if kind == "rec":
@@ -174,7 +187,7 @@ def block_prefill(params, x, cfg: ModelConfig, kind: str, positions,
         a, cache = A.mla_prefill(params["mixer"], h, cfg, positions, max_len)
     else:
         a, cache = A.attn_prefill(params["mixer"], h, cfg, kind, positions,
-                                  max_len)
+                                  max_len, lengths=lengths)
     if kind in ("mlstm", "slstm"):
         return nn.residual_add(x, a), cache, aux
     if cfg.post_norm:
@@ -469,8 +482,22 @@ def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def lm_prefill(params, inputs, cfg: ModelConfig, max_len: int,
-               positions=None):
-    """Process the prompt; return (logits_last (B, V), caches)."""
+               positions=None, lengths=None):
+    """Process the prompt; return (logits_last (B, V), caches).
+
+    ``lengths`` (B,) int32, optional: true prompt length per row of a
+    right-padded batch. The returned logits are read at position
+    ``lengths - 1`` (the last real token) instead of the pad tail; with a
+    causal mask, right-padding guarantees no real token ever attends a pad
+    (pads only occupy *later* positions). Full/MLA attention caches need
+    no further masking (decode's per-row ``arange <= pos`` hides stale pad
+    KV until each slot is overwritten in place); sliding-window layers
+    fill their ring buffer from the true prompt tail (see
+    ``attn_prefill``). Recurrent/xLSTM mixers are NOT pad-safe — their
+    prefill state consumes every token, pads included — so callers must
+    give them exact-length prompts (the serving engine detects this and
+    disables prompt bucketing).
+    """
     lead, pattern, n_rep, trail = _layer_layout(cfg)
     lead_f, pat_f, trail_f = _moe_flags(cfg)
     positions = _default_positions(inputs, cfg) if positions is None else positions
@@ -478,7 +505,8 @@ def lm_prefill(params, inputs, cfg: ModelConfig, max_len: int,
 
     caches = {"lead": [], "scan": [], "trail": []}
     for p, kind, mf in zip(params["lead"], lead, lead_f):
-        x, c, _ = block_prefill(p, x, cfg, kind, positions, max_len, mf)
+        x, c, _ = block_prefill(p, x, cfg, kind, positions, max_len, mf,
+                                lengths=lengths)
         caches["lead"].append(c)
 
     if n_rep:
@@ -486,7 +514,7 @@ def lm_prefill(params, inputs, cfg: ModelConfig, max_len: int,
             cs = []
             for j, kind in enumerate(pattern):
                 x, c, _ = block_prefill(sliced[j], x, cfg, kind, positions,
-                                        max_len, pat_f[j])
+                                        max_len, pat_f[j], lengths=lengths)
                 cs.append(c)
             return x, tuple(cs)
 
@@ -495,11 +523,17 @@ def lm_prefill(params, inputs, cfg: ModelConfig, max_len: int,
         caches["scan"] = list(scan_caches)
 
     for p, kind, mf in zip(params["trail"], trail, trail_f):
-        x, c, _ = block_prefill(p, x, cfg, kind, positions, max_len, mf)
+        x, c, _ = block_prefill(p, x, cfg, kind, positions, max_len, mf,
+                                lengths=lengths)
         caches["trail"].append(c)
 
     h = _apply_norm(params["final_norm"], x, cfg)
-    logits = logits_from_hidden(params, h[:, -1:], cfg)[:, 0]
+    if lengths is None:
+        h_last = h[:, -1:]
+    else:
+        idx = jnp.asarray(lengths, jnp.int32).reshape(-1) - 1
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = logits_from_hidden(params, h_last, cfg)[:, 0]
     return logits, caches
 
 
@@ -507,13 +541,14 @@ def lm_decode(params, token, pos, caches, cfg: ModelConfig):
     """One decode step.
 
     token: (B,) int32 (or (B, D) frame embedding for input_mode=embeddings);
-    pos: scalar int32 — current absolute position. Returns
-    (logits (B, V), new_caches).
+    pos: scalar int32 (lockstep batch) or (B,) int32 per-slot absolute
+    positions (continuous batching). Returns (logits (B, V), new_caches).
     """
     lead, pattern, n_rep, trail = _layer_layout(cfg)
     lead_f, pat_f, trail_f = _moe_flags(cfg)
     b = token.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = A.pos_vector(pos, b)
+    positions = pos[:, None]
     inputs = token[:, None] if cfg.input_mode == "tokens" else token[:, None, :]
     x = embed_inputs(params, inputs, cfg, positions)
 

@@ -204,9 +204,19 @@ def embedding_lookup(table, ids):
 
 @tagged(OpGroup.MEMORY, "kv_cache_update")
 def kv_cache_update(cache, new, index):
-    """Insert ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at ``index``."""
-    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
-                                               index, axis=1)
+    """Insert ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at ``index``.
+
+    ``index`` is either a scalar (all rows write the same position — the
+    lockstep decode of a freshly prefilled batch) or a per-row ``(B,)``
+    vector (continuous batching: every slot sits at its own position).
+    """
+    new = new.astype(cache.dtype)
+    index = jnp.asarray(index, jnp.int32)
+    if index.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, index, axis=1)
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )(cache, new, index)
 
 
 @tagged(OpGroup.MEMORY, "apply_rope")

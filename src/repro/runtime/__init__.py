@@ -14,6 +14,7 @@ sharded axis on the scan dim and all-gather every iteration.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import signal
 import time
@@ -158,6 +159,7 @@ class Trainer:
         self.watchdog = StragglerWatchdog()
         self._preempted = False
         self._old_handler = None
+        self._handler_installed = False
 
         params = init_params_fn()
         self.state = TrainState(params, init_opt_state(params, opt_cfg))
@@ -171,7 +173,32 @@ class Trainer:
         self._preempted = True
 
     def install_preemption_handler(self):
+        if self._handler_installed:
+            return
         self._old_handler = signal.signal(signal.SIGTERM, self._on_sigterm)
+        self._handler_installed = True
+
+    def restore_signal_handler(self):
+        """Put the previous SIGTERM handler back (no-op if not installed).
+
+        ``train()`` calls this on exit so repeated Trainer uses (tests,
+        notebooks, multi-job drivers) never leak the handler into code
+        that runs after the loop.
+        """
+        if not self._handler_installed:
+            return
+        signal.signal(signal.SIGTERM, self._old_handler)
+        self._old_handler = None
+        self._handler_installed = False
+
+    @contextlib.contextmanager
+    def preemption_handler(self):
+        """Context-manager form: install on enter, restore on exit."""
+        self.install_preemption_handler()
+        try:
+            yield self
+        finally:
+            self.restore_signal_handler()
 
     # -- resume -----------------------------------------------------------
     def try_resume(self) -> bool:
@@ -189,27 +216,39 @@ class Trainer:
 
     def train(self, total_steps: int) -> dict:
         history = []
-        while self.step < total_steps and not self._preempted:
-            batch = self._next_batch()
-            t0 = time.perf_counter()
-            self.state, metrics = self._train_step(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            if self.watchdog.observe(dt):
-                self.log(f"[watchdog] step {self.step} straggler: {dt:.3f}s")
-            self.step += 1
-            if self.step % self.log_every == 0:
-                loss = float(metrics["loss"])
-                history.append((self.step, loss))
-                self.log(f"step {self.step:>6d}  loss {loss:.4f}  "
-                         f"lr {float(metrics['lr']):.2e}  {dt*1e3:.1f}ms")
-            if self.ckpt and self.step % self.ckpt_every == 0:
-                self.ckpt.save(self.step, self.state)
-        if self.ckpt and (self._preempted or self.step == total_steps):
-            self.ckpt.save(self.step, self.state, async_=False)
-            if self._preempted:
-                self.log(f"[preempt] final checkpoint at step {self.step}")
-        if self.ckpt:
-            self.ckpt.wait()
+        last_saved_step = None
+        try:
+            while self.step < total_steps and not self._preempted:
+                batch = self._next_batch()
+                t0 = time.perf_counter()
+                self.state, metrics = self._train_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if self.watchdog.observe(dt):
+                    self.log(f"[watchdog] step {self.step} straggler: "
+                             f"{dt:.3f}s")
+                self.step += 1
+                if self.step % self.log_every == 0:
+                    loss = float(metrics["loss"])
+                    history.append((self.step, loss))
+                    self.log(f"step {self.step:>6d}  loss {loss:.4f}  "
+                             f"lr {float(metrics['lr']):.2e}  {dt*1e3:.1f}ms")
+                if self.ckpt and self.step % self.ckpt_every == 0:
+                    self.ckpt.save(self.step, self.state)
+                    last_saved_step = self.step
+            if self.ckpt and (self._preempted or self.step == total_steps) \
+                    and last_saved_step != self.step:
+                # skip when the periodic branch just saved this exact step
+                # (total_steps % ckpt_every == 0 would otherwise write the
+                # final checkpoint twice)
+                self.ckpt.save(self.step, self.state, async_=False)
+                last_saved_step = self.step
+                if self._preempted:
+                    self.log(f"[preempt] final checkpoint at step "
+                             f"{self.step}")
+            if self.ckpt:
+                self.ckpt.wait()
+        finally:
+            self.restore_signal_handler()
         return {"history": history, "stragglers": self.watchdog.flagged,
                 "preempted": self._preempted, "step": self.step}

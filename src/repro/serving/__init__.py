@@ -1,15 +1,33 @@
-"""Serving: KV-cache engine with batched prefill + decode scheduling.
+"""Serving: continuous-batching KV-cache engine with per-slot positions.
 
 ``make_prefill_step`` / ``make_serve_step`` build the two jitted programs the
 dry-run lowers for the inference shapes (prefill_32k lowers prefill;
-decode_32k / long_500k lower serve_step — one new token against a
-seq_len-deep cache).
+decode_32k / long_500k lower serve_step — one new token per slot against a
+seq_len-deep cache, with a vectorized per-slot ``pos``).
 
-``Engine`` is the batched-request driver used by examples/serve_batched.py:
-a FIFO of requests is packed into fixed-size batches (static shapes: TPU
-serving engines pad the batch, not the program), prefilled once, then
-decoded step-by-step with per-sequence EOS masking and greedy or
-temperature sampling. Throughput metrics are recorded per phase.
+``Engine`` is the continuous-batching driver used by
+examples/serve_batched.py and the ``serving`` bench section. It keeps a slot
+table of ``max_batch`` sequences over ONE shared KV cache (static shapes:
+TPU serving engines pad the batch, not the program):
+
+* admission is per-slot: each request is prefilled alone (right-padded to a
+  power-of-two bucket so the prefill program compiles once per bucket, with
+  a length mask picking the last real token's logits) and its caches are
+  written into the shared cache at the slot index via
+  ``dynamic_update_slice`` — no other slot is disturbed;
+* decode runs one step for the whole slot table with a per-slot position
+  vector (``pos: (B,)``), so sequences of different depths coexist;
+* a finished slot (EOS / token budget / context full) is refilled from the
+  FIFO queue *immediately*, in the same engine step — the batch never
+  drains;
+* ``EngineStats`` extends throughput accounting with per-request latency:
+  time-to-first-token, queue wait, and per-token decode latency.
+
+Token accounting: every request's first output token comes from the prefill
+argmax and is counted in ``EngineStats.first_tokens``; every token emitted
+by a decode step is counted in ``EngineStats.decode_tokens`` at the moment
+it is appended to a request's output, so ``decode_tokens`` equals the total
+number of emitted decode tokens exactly.
 """
 
 from __future__ import annotations
@@ -29,16 +47,21 @@ from repro.runtime import cast_params
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int, mesh=None) -> Callable:
-    def prefill_step(params, tokens):
+    """prefill_step(params, tokens, lengths=None) -> (last_logits, caches)."""
+    def prefill_step(params, tokens, lengths=None):
         with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard):
             working = cast_params(params, cfg.activation_dtype)
-            return lm_prefill(working, tokens, cfg, max_len=max_len)
+            return lm_prefill(working, tokens, cfg, max_len=max_len,
+                              lengths=lengths)
     return prefill_step
 
 
 def make_serve_step(cfg: ModelConfig, mesh=None,
                     greedy: bool = True, temperature: float = 1.0) -> Callable:
-    """serve_step(params, token, pos, caches, key) -> (token', caches')."""
+    """serve_step(params, token, pos, caches, key) -> (token', caches').
+
+    ``pos`` is a scalar (lockstep batch) or a per-slot ``(B,)`` vector.
+    """
     def serve_step(params, token, pos, caches, key):
         with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard):
             working = cast_params(params, cfg.activation_dtype)
@@ -60,95 +83,287 @@ class Request:
     max_new_tokens: int = 32
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # wall-clock timeline (engine clock; seconds)
+    enqueue_t: float = 0.0
+    admit_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(self.admit_t - self.enqueue_t, 0.0)
+
+    @property
+    def ttft_s(self) -> float:
+        """Time-to-first-token: enqueue -> first (prefill-argmax) token."""
+        return max(self.first_token_t - self.enqueue_t, 0.0)
+
+    @property
+    def decode_tokens(self) -> int:
+        """Tokens emitted by decode steps (everything after the first)."""
+        return max(len(self.output) - 1, 0)
+
+    @property
+    def decode_tok_latency_s(self) -> float:
+        """Mean wall time per emitted decode token for this request."""
+        n = self.decode_tokens
+        return (self.finish_t - self.first_token_t) / n if n else 0.0
 
 
 @dataclasses.dataclass
 class EngineStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
+    prefill_tokens: int = 0           # real (unpadded) prompt tokens
+    decode_tokens: int = 0            # tokens emitted by decode steps
+    first_tokens: int = 0             # tokens emitted by prefill argmax
+    decode_steps: int = 0             # jitted decode dispatches
+    completed: int = 0                # finished requests
+    decoded_requests: int = 0         # completed requests that decoded > 0
+    ttft_sum_s: float = 0.0
+    queue_wait_sum_s: float = 0.0
+    decode_tok_latency_sum_s: float = 0.0   # sum of per-request means
 
     @property
     def decode_tok_per_s(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
+    @property
+    def emitted_tokens(self) -> int:
+        return self.first_tokens + self.decode_tokens
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return self.ttft_sum_s / self.completed if self.completed else 0.0
+
+    @property
+    def mean_queue_wait_s(self) -> float:
+        return self.queue_wait_sum_s / self.completed if self.completed \
+            else 0.0
+
+    @property
+    def mean_decode_tok_latency_s(self) -> float:
+        """Mean of per-request per-token decode latency, over the requests
+        that emitted decode tokens (a request finishing at admission has
+        no decode latency and must not drag the mean toward zero)."""
+        return self.decode_tok_latency_sum_s / self.decoded_requests \
+            if self.decoded_requests else 0.0
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _slot_insert(shared: dict, one: dict, slot) -> dict:
+    """Write a single-row cache tree into the shared cache at ``slot``.
+
+    lead/trail leaves are batch-leading ``(B, ...)``; scan-stacked leaves
+    carry a leading layer dim ``(n_rep, B, ...)`` (see ``init_lm_cache``).
+    """
+    def ins(axis):
+        def f(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=axis)
+        return f
+
+    return {
+        "lead": [jax.tree_util.tree_map(ins(0), d, s)
+                 for d, s in zip(shared["lead"], one["lead"])],
+        "scan": [jax.tree_util.tree_map(ins(1), d, s)
+                 for d, s in zip(shared["scan"], one["scan"])],
+        "trail": [jax.tree_util.tree_map(ins(0), d, s)
+                  for d, s in zip(shared["trail"], one["trail"])],
+    }
+
 
 class Engine:
-    """Static-batch serving engine (pad the batch, not the program)."""
+    """Continuous-batching serving engine over one shared static KV cache."""
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
                  mesh=None, greedy: bool = True, pad_id: int = 0,
-                 seed: int = 0):
+                 seed: int = 0, min_prefill_bucket: int = 8,
+                 clock: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
         self.pad_id = pad_id
+        self.greedy = greedy
+        self.min_prefill_bucket = min_prefill_bucket
         self.key = jax.random.PRNGKey(seed)
         self.queue: List[Request] = []
         self.stats = EngineStats()
+        self.clock = clock
         self._prefill = jax.jit(make_prefill_step(cfg, max_len, mesh))
-        self._decode = jax.jit(make_serve_step(cfg, mesh, greedy=greedy))
+        # donate the cache through decode (same as the dry-run's lowering):
+        # the step updates B rows in place instead of copying the cache
+        self._decode = jax.jit(make_serve_step(cfg, mesh, greedy=greedy),
+                               donate_argnums=(3,))
+        # donate the shared cache: the splice updates one row in place
+        # instead of copying every (max_batch, max_len, ...) leaf per admit
+        self._insert = jax.jit(_slot_insert, donate_argnums=(0,))
         self._uid = 0
+        # recurrent/xLSTM prefill folds every input token — pads included —
+        # into its running state, so bucketed right-padding would corrupt
+        # it: those architectures prefill at exact prompt length (one
+        # compiled prefill per distinct length instead of per bucket)
+        self._pad_safe = not (set(cfg.layer_kinds())
+                              & {"rec", "mlstm", "slstm"})
+        # slot table
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._pos = np.zeros((max_batch,), np.int32)
+        self._cur = np.full((max_batch,), pad_id, np.int32)
+        self._caches = init_lm_cache(cfg, max_batch, max_len)
 
+    # -- queue -------------------------------------------------------------
     def add_request(self, prompt: Sequence[int],
                     max_new_tokens: int = 32) -> int:
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.max_len:
+            raise ValueError(f"prompt length {len(prompt)} exceeds "
+                             f"max_len={self.max_len}")
         self._uid += 1
-        self.queue.append(Request(self._uid, list(prompt), max_new_tokens))
+        req = Request(self._uid, prompt, max_new_tokens,
+                      enqueue_t=self.clock())
+        self.queue.append(req)
         return self._uid
 
-    def _pack(self, reqs: List[Request]):
-        """Right-pad prompts to a common length (documented approximation:
-        shorter prompts see pad tokens in context; production engines use
-        per-slot position tracking, which the decode path here supports via
-        a vectorized ``pos`` — kept scalar for the example's simplicity)."""
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.full((len(reqs), plen), self.pad_id, np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-align the tail
-        return jnp.asarray(toks), plen
+    # -- admission ---------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        if not self._pad_safe:
+            return plen
+        return min(_next_pow2(max(plen, self.min_prefill_bucket)),
+                   self.max_len)
+
+    def _first_token(self, logits) -> int:
+        lf = logits.astype(jnp.float32)
+        if self.greedy:
+            return int(jnp.argmax(lf, axis=-1)[0])
+        self.key, k = jax.random.split(self.key)
+        return int(jax.random.categorical(k, lf, axis=-1)[0])
+
+    def _admit(self, slot: int, req: Request) -> bool:
+        """Prefill ``req`` alone and splice it into ``slot``.
+
+        Returns True if the slot is now occupied (False when the request
+        completed at admission: single-token budget or immediate EOS).
+        """
+        req.admit_t = self.clock()
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        toks = np.full((1, bucket), self.pad_id, np.int32)
+        toks[0, :plen] = req.prompt          # right-padded
+        t0 = time.perf_counter()
+        logits, one = self._prefill(self.params, jnp.asarray(toks),
+                                    jnp.full((1,), plen, jnp.int32))
+        first = self._first_token(logits)
+        live = not ((self.eos_id is not None and first == self.eos_id)
+                    or req.max_new_tokens <= 1
+                    or plen >= self.max_len)
+        if live:
+            # splice the single-row caches into the slot; block on the
+            # result so this full-cache write is charged to the prefill
+            # phase, not the next decode step's timed region. A request
+            # finishing at admission never needs its caches.
+            self._caches = self._insert(self._caches, one, slot)
+            jax.block_until_ready(self._caches)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += plen
+
+        req.output.append(first)
+        self.stats.first_tokens += 1
+        req.first_token_t = self.clock()
+        if not live:
+            self._finish(req)
+            return False
+        self.slots[slot] = req
+        self._pos[slot] = plen               # next write index == prompt end
+        self._cur[slot] = first
+        return True
+
+    def _admit_free_slots(self) -> List[Request]:
+        """Fill every free slot from the queue; returns requests that
+        completed at admission time."""
+        done: List[Request] = []
+        for i in range(self.max_batch):
+            while self.queue and self.slots[i] is None:
+                req = self.queue.pop(0)
+                if not self._admit(i, req):
+                    done.append(req)
+        return done
+
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        req.finish_t = self.clock()
+        s = self.stats
+        s.completed += 1
+        s.ttft_sum_s += req.ttft_s
+        s.queue_wait_sum_s += req.queue_wait_s
+        if req.decode_tokens:
+            s.decoded_requests += 1
+            s.decode_tok_latency_sum_s += req.decode_tok_latency_s
+
+    def _free(self, slot: int) -> None:
+        self.slots[slot] = None
+        self._pos[slot] = 0
+        self._cur[slot] = self.pad_id
+
+    # -- stepping ----------------------------------------------------------
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def step(self) -> List[Request]:
+        """One engine iteration: admit, decode one token per live slot,
+        retire finished slots (refilled on the next iteration — or by the
+        admission phase of this call if slots were already free).
+        Returns the requests finished during this call."""
+        finished = self._admit_free_slots()
+
+        # invariant: every occupied slot has room for its next KV write —
+        # _admit finishes full-context prompts at admission and the decode
+        # loop below retires a slot the moment its position hits max_len
+        assert all(r is None or self._pos[i] < self.max_len
+                   for i, r in enumerate(self.slots))
+        if self.active == 0:
+            return finished
+
+        t0 = time.perf_counter()
+        self.key, k = jax.random.split(self.key)
+        nxt, self._caches = self._decode(
+            self.params, jnp.asarray(self._cur), jnp.asarray(self._pos),
+            self._caches, k)
+        nxt_host = np.asarray(jax.block_until_ready(nxt))
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue            # pad-fed dead slot: output discarded
+            tok = int(nxt_host[i])
+            r.output.append(tok)
+            self.stats.decode_tokens += 1    # counted where emitted
+            self._pos[i] += 1
+            self._cur[i] = tok
+            if (self.eos_id is not None and tok == self.eos_id) \
+                    or len(r.output) >= r.max_new_tokens \
+                    or self._pos[i] >= self.max_len:
+                self._finish(r)
+                finished.append(r)
+                self._free(i)
+        return finished
 
     def run(self) -> List[Request]:
-        """Drain the queue; returns completed requests."""
+        """Serve until the queue and the slot table are empty; returns the
+        completed requests in completion order."""
         finished: List[Request] = []
-        while self.queue:
-            batch = self.queue[: self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            tokens, plen = self._pack(batch)
-            b = tokens.shape[0]
-
-            t0 = time.perf_counter()
-            logits, caches = self._prefill(self.params, tokens)
-            nxt = jnp.argmax(logits.astype(jnp.float32), -1).astype(jnp.int32)
-            jax.block_until_ready(nxt)
-            self.stats.prefill_s += time.perf_counter() - t0
-            self.stats.prefill_tokens += b * plen
-
-            live = np.ones((b,), bool)
-            max_new = max(r.max_new_tokens for r in batch)
-            t0 = time.perf_counter()
-            cur = nxt
-            for step in range(max_new):
-                for i, r in enumerate(batch):
-                    if live[i]:
-                        tok = int(cur[i])
-                        r.output.append(tok)
-                        if (self.eos_id is not None and tok == self.eos_id) \
-                                or len(r.output) >= r.max_new_tokens:
-                            live[i] = False
-                            r.done = True
-                if not live.any() or plen + step + 1 >= self.max_len:
-                    break
-                self.key, k = jax.random.split(self.key)
-                cur, caches = self._decode(self.params, cur,
-                                           jnp.int32(plen + step), caches, k)
-                self.stats.decode_tokens += int(live.sum())
-            jax.block_until_ready(cur)
-            self.stats.decode_s += time.perf_counter() - t0
-            for r in batch:
-                r.done = True
-                finished.append(r)
+        while self.queue or self.active:
+            finished.extend(self.step())
         return finished

@@ -56,3 +56,33 @@ def test_timeout_scale():
     sec = Section(name="s", title="t", fn=quickish, timeout_s=0.1)
     assert run_section(sec, ctx()).status == "timeout"
     assert run_section(sec, ctx(), timeout_scale=10.0).status == "ok"
+
+
+def test_serving_section_registered_in_quick_tier():
+    # the CI regression gate must cover the serving engine
+    from repro.bench import sections as _sections  # noqa: F401 (registers)
+    from repro.bench.runner import SECTIONS
+
+    s = SECTIONS["serving"]
+    assert "quick" in s.tiers and "full" in s.tiers
+
+
+def test_serving_rows_shape():
+    """The serving section emits one engine row + share-bearing phase rows
+    that satisfy the artifact schema."""
+    from repro.bench.cases import SERVING_CASES, clear_caches
+    from repro.bench.sections import serving_rows
+
+    try:
+        rows = serving_rows(SERVING_CASES[0], requests=2, max_new_tokens=2)
+    finally:
+        clear_caches()
+    phases = {r["phase"] for r in rows}
+    assert phases == {"engine", "prefill", "decode"}
+    eng = next(r for r in rows if r["phase"] == "engine")
+    assert eng["requests"] == 2
+    assert eng["decode_tokens"] == 2    # 1 prefill + 1 decode token each
+    for r in rows:
+        if r["phase"] != "engine":
+            assert 0.0 <= r["gemm_frac"] <= 1.0
+            assert 0.0 <= r["nongemm_frac"] <= 1.0

@@ -122,11 +122,61 @@ def test_preemption_checkpoint(tmp_path):
     assert tr.ckpt.latest_step() == 3
 
 
+def test_preemption_handler_restored(tmp_path):
+    import signal
+
+    before = signal.getsignal(signal.SIGTERM)
+    tr = mk_trainer(str(tmp_path), tiny_cfg())
+    tr.install_preemption_handler()
+    assert signal.getsignal(signal.SIGTERM) == tr._on_sigterm
+    tr.train(2)
+    # train() returning must put the previous handler back
+    assert signal.getsignal(signal.SIGTERM) == before
+    # context-manager form restores too
+    with tr.preemption_handler():
+        assert signal.getsignal(signal.SIGTERM) == tr._on_sigterm
+    assert signal.getsignal(signal.SIGTERM) == before
+
+
+def test_no_double_final_checkpoint(tmp_path):
+    tr = mk_trainer(str(tmp_path), tiny_cfg())
+    tr.ckpt_every = 5
+    saves = []
+    orig_save = tr.ckpt.save
+    tr.ckpt.save = lambda step, state, **kw: (saves.append(step),
+                                             orig_save(step, state, **kw))
+    tr.train(10)   # total_steps % ckpt_every == 0: last step saves once
+    assert saves == [5, 10]
+
+
 # -- serving ---------------------------------------------------------------
 
-def test_engine_serves_batches():
+@pytest.fixture(scope="module")
+def serving_model():
     cfg = tiny_cfg()
-    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def reference_generate(cfg, params, prompt, max_new_tokens, max_len=64):
+    """Per-request static run: exact-length prefill + scalar-pos decode."""
+    from repro.models import lm_decode, lm_prefill
+
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, caches = jax.jit(
+        lambda p, t: lm_prefill(p, t, cfg, max_len=max_len))(params, toks)
+    out = [int(jnp.argmax(logits.astype(jnp.float32), -1)[0])]
+    step = jax.jit(lambda p, t, pos, c: lm_decode(p, t, pos, c, cfg))
+    pos = len(prompt)
+    while len(out) < max_new_tokens and pos < max_len:
+        lg, caches = step(params, jnp.asarray([out[-1]], jnp.int32),
+                          jnp.int32(pos), caches)
+        out.append(int(jnp.argmax(lg.astype(jnp.float32), -1)[0]))
+        pos += 1
+    return out
+
+
+def test_engine_serves_batches(serving_model):
+    cfg, params = serving_model
     eng = Engine(cfg, params, max_batch=3, max_len=64)
     uids = [eng.add_request(list(range(1, 5 + i)), max_new_tokens=6)
             for i in range(7)]
@@ -136,9 +186,8 @@ def test_engine_serves_batches():
     assert eng.stats.decode_tokens > 0
 
 
-def test_engine_greedy_deterministic():
-    cfg = tiny_cfg()
-    params = init_lm(jax.random.PRNGKey(0), cfg)
+def test_engine_greedy_deterministic(serving_model):
+    cfg, params = serving_model
     outs = []
     for _ in range(2):
         eng = Engine(cfg, params, max_batch=2, max_len=64)
@@ -147,9 +196,8 @@ def test_engine_greedy_deterministic():
     assert outs[0] == outs[1]
 
 
-def test_engine_eos_stops():
-    cfg = tiny_cfg()
-    params = init_lm(jax.random.PRNGKey(0), cfg)
+def test_engine_eos_stops(serving_model):
+    cfg, params = serving_model
     eng = Engine(cfg, params, max_batch=1, max_len=64)
     eng.add_request([1, 2, 3], max_new_tokens=32)
     first = eng.run()[0].output
@@ -157,3 +205,144 @@ def test_engine_eos_stops():
     eng2 = Engine(cfg, params, max_batch=1, max_len=64, eos_id=first[0])
     eng2.add_request([1, 2, 3], max_new_tokens=32)
     assert len(eng2.run()[0].output) == 1
+
+
+def test_engine_continuous_batching_end_to_end(serving_model):
+    """ISSUE acceptance: more requests than max_batch, mixed prompt lengths
+    and budgets; outputs bit-identical to per-request static runs; stats
+    report TTFT / per-token decode latency; decode_tokens == emitted."""
+    cfg, params = serving_model
+    eng = Engine(cfg, params, max_batch=3, max_len=64)
+    rng = np.random.RandomState(0)
+    reqs = {}
+    for i in range(8):                     # > max_batch
+        plen = int(rng.randint(3, 22))     # uneven prompt lengths
+        prompt = rng.randint(1, cfg.vocab_size, size=plen).tolist()
+        max_new = int(rng.randint(2, 9))   # mixed budgets
+        uid = eng.add_request(prompt, max_new_tokens=max_new)
+        reqs[uid] = (prompt, max_new)
+
+    done = eng.run()
+    assert len(done) == len(reqs) and all(r.done for r in done)
+
+    by_uid = {r.uid: r for r in done}
+    for uid, (prompt, max_new) in reqs.items():
+        ref = reference_generate(cfg, params, prompt, max_new)
+        assert by_uid[uid].output == ref, uid
+
+    s = eng.stats
+    emitted = sum(r.decode_tokens for r in done)
+    assert s.decode_tokens == emitted          # counted where emitted
+    assert s.first_tokens == len(reqs)         # prefill argmax per request
+    assert s.completed == len(reqs)
+    assert s.mean_ttft_s > 0 and all(r.ttft_s > 0 for r in done)
+    assert s.mean_decode_tok_latency_s > 0
+    assert any(r.decode_tok_latency_s > 0 for r in done)
+    # requests beyond the first max_batch had to wait for a slot
+    waited = [r for r in done if r.uid > eng.max_batch]
+    assert all(r.queue_wait_s > 0 for r in waited)
+
+
+def test_engine_eos_frees_slot_for_refill(serving_model):
+    """A slot finishing at admission (EOS on the first token) must be
+    refilled from the queue in the same pass — the batch never drains."""
+    cfg, params = serving_model
+    probe = Engine(cfg, params, max_batch=1, max_len=64)
+    probe.add_request([5, 6, 7], max_new_tokens=4)
+    eos = probe.run()[0].output[0]
+
+    eng = Engine(cfg, params, max_batch=2, max_len=64, eos_id=eos)
+    eng.add_request([5, 6, 7], max_new_tokens=8)       # dies at admission
+    for i in range(4):
+        eng.add_request([1 + i, 2 + i, 3 + i, 4 + i], max_new_tokens=3)
+    done = eng.run()
+    assert len(done) == 5 and all(r.done for r in done)
+    first = next(r for r in done if r.uid == 1)
+    assert first.output == [eos]
+    assert eng.stats.decode_tokens == sum(r.decode_tokens for r in done)
+
+
+def test_engine_per_slot_positions_advance_independently(serving_model):
+    cfg, params = serving_model
+    eng = Engine(cfg, params, max_batch=2, max_len=64)
+    eng.add_request(list(range(1, 4)), max_new_tokens=10)    # len 3
+    eng.add_request(list(range(1, 10)), max_new_tokens=10)   # len 9
+    eng.step()   # admits both (pos = prompt len), decodes one token each
+    live = sorted(int(p) for r, p in zip(eng.slots, eng._pos)
+                  if r is not None)
+    assert live == [4, 10]
+    eng.step()
+    live = sorted(int(p) for r, p in zip(eng.slots, eng._pos)
+                  if r is not None)
+    assert live == [5, 11]
+    eng.run()
+
+
+def test_engine_context_full_truncates(serving_model):
+    cfg, params = serving_model
+    eng = Engine(cfg, params, max_batch=1, max_len=16)
+    eng.add_request(list(range(1, 13)), max_new_tokens=99)   # len 12
+    r = eng.run()[0]
+    # 1 prefill token + decode up to the cache edge (writes at 12..15)
+    assert r.done and len(r.output) == 1 + (16 - 12)
+
+
+def test_engine_rejects_oversized_prompt(serving_model):
+    cfg, params = serving_model
+    eng = Engine(cfg, params, max_batch=1, max_len=8)
+    with pytest.raises(ValueError):
+        eng.add_request(list(range(1, 11)))
+
+
+def test_engine_local_attention_bucketed_prefill_matches_reference():
+    """Sliding-window ring buffers must hold the TRUE prompt tail, not the
+    right-padded bucket tail: a prompt longer than the window, padded up
+    to a bucket, would otherwise evict in-window real KV with masked pads."""
+    cfg = tiny_cfg().replace(block_pattern=("local", "attn"), n_layers=2,
+                             window_size=8)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=2, max_len=64)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n).tolist()
+               for n in (13, 5, 27)]   # 13 buckets to 16 > window 8
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    done = {r.uid: r for r in eng.run()}
+    for uid, p in enumerate(prompts, start=1):
+        assert done[uid].output == reference_generate(cfg, params, p, 6), uid
+
+
+def test_engine_recurrent_mixer_uses_exact_prefill():
+    """Recurrent prefill state consumes every token, pads included — the
+    engine must disable prompt bucketing and still match per-request runs."""
+    cfg = reduced(get_config("recurrentgemma-2b")).replace(loss_chunk=0)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=2, max_len=64)
+    assert not eng._pad_safe
+    assert eng._bucket(5) == 5     # exact length, no pow2 padding
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n).tolist()
+               for n in (5, 11)]
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=4)
+    done = {r.uid: r for r in eng.run()}
+    for uid, p in enumerate(prompts, start=1):
+        assert done[uid].output == reference_generate(cfg, params, p, 4), uid
+
+
+def test_engine_latency_mean_skips_zero_decode_requests(serving_model):
+    cfg, params = serving_model
+    probe = Engine(cfg, params, max_batch=1, max_len=64)
+    probe.add_request([9, 8, 7], max_new_tokens=4)
+    eos = probe.run()[0].output[0]
+
+    eng = Engine(cfg, params, max_batch=2, max_len=64, eos_id=eos)
+    eng.add_request([9, 8, 7], max_new_tokens=8)    # finishes at admission
+    eng.add_request([1, 2, 3, 4, 5], max_new_tokens=4)
+    done = eng.run()
+    s = eng.stats
+    decoded = [r for r in done if r.decode_tokens]
+    assert s.decoded_requests == len(decoded)
+    if decoded:
+        expect = sum(r.decode_tok_latency_s for r in decoded) / len(decoded)
+        assert s.mean_decode_tok_latency_s == pytest.approx(expect)

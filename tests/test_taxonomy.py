@@ -39,6 +39,10 @@ def test_parse_scope_none_for_untagged():
     ("exp", OpGroup.ELEMENTWISE),
     ("tanh", OpGroup.ACTIVATION),
     ("reduce_sum", OpGroup.REDUCTION),
+    # the whole cum* family is REDUCTION, matching the module doc
+    ("cumsum", OpGroup.REDUCTION),
+    ("cumprod", OpGroup.REDUCTION),
+    ("cummax", OpGroup.REDUCTION),
     ("psum", OpGroup.COLLECTIVE),
     ("scan", OpGroup.CONTROL),
     ("nonexistent_prim", OpGroup.OTHER),
