@@ -7,10 +7,12 @@ seq)`` tuples.
 
 from __future__ import annotations
 
-from repro.bench.cases import (CASES, bench_config, build, profile_case,
-                               profile_case_compiled, quick_cases,
-                               tier_cases)
+from repro.bench.cases import (CASES, bench_config, build, case_workload,
+                               profile_case, profile_case_compiled,
+                               profile_case_quantized, quick_cases,
+                               tier_cases, workload_for_case)
 from repro.bench.schema import BenchCase
 
-__all__ = ["CASES", "BenchCase", "bench_config", "build", "profile_case",
-           "profile_case_compiled", "quick_cases", "tier_cases"]
+__all__ = ["CASES", "BenchCase", "bench_config", "build", "case_workload",
+           "profile_case", "profile_case_compiled", "profile_case_quantized",
+           "quick_cases", "tier_cases", "workload_for_case"]

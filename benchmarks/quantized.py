@@ -1,0 +1,21 @@
+"""Thin shim — the paper's §4.4 quantization comparison (fp32 vs simulated
+int8 QDQ) is the ``quantized`` section of ``repro.bench``; this renders
+its rows."""
+
+from __future__ import annotations
+
+from repro.bench.schema import BenchCase
+from repro.bench.sections import quantized_rows
+from repro.core.report import render_quantized_rows
+
+from benchmarks.common import CASES
+
+
+def run(cases=None) -> str:
+    cases = [c if isinstance(c, BenchCase) else BenchCase(*c)
+             for c in (cases or CASES)]
+    return render_quantized_rows(quantized_rows(cases))
+
+
+if __name__ == "__main__":
+    print(run())

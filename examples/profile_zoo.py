@@ -8,11 +8,11 @@ import argparse
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.report import breakdown_table, shift_summary
 
-from benchmarks.common import CASES, profile_case
+from repro.bench.cases import CASES, workload_for_case
 
 
 def main() -> None:
@@ -23,11 +23,11 @@ def main() -> None:
     cases = CASES if args.full else CASES[:6]
 
     eager, acc = [], []
-    for alias, arch, batch, seq in cases:
-        print(f"profiling {alias} ...", flush=True)
-        e, a = profile_case(alias, arch, batch, seq)
-        eager.append(e)
-        acc.append(a)
+    for case in cases:
+        print(f"profiling {case.alias} ...", flush=True)
+        w = workload_for_case(case)
+        eager.append(w.profile("eager-cpu"))
+        acc.append(w.profile("eager-modeled:a100"))
     print()
     print(breakdown_table(eager + acc))
     print(shift_summary(eager, acc))

@@ -2,29 +2,29 @@
 
     PYTHONPATH=src python examples/quickstart.py [arch]
 
-Plug-model-and-profile (paper Fig. 4): trace the model, classify every
-operator into the paper's groups, measure the eager CPU latency per op,
-model the accelerated latencies, and print the paper-style reports.
+Plug-model-and-profile (paper Fig. 4), through the unified Workload API:
+declare the scenario once, then run it on any registered profiler backend —
+measured eager CPU, modeled eager A100, XLA-compiled TPU roofline — and
+compose transforms (here: the paper's §4.4 simulated-int8 QDQ) on top.
 """
 
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (profile_accelerated, profile_accelerated_eager,
-                        profile_eager)
+from repro.core import QuantizeDequantTransform
 from repro.core.report import breakdown_table, group_table, top_group_table
 
-from benchmarks.common import build
+from repro.bench.cases import case_workload
 
 
 def main(arch: str = "gpt2-xl") -> None:
-    fwd, params, inputs = build(arch, 1, 16)
+    w = case_workload(arch, 1, 16, alias=arch)
     print(f"profiling {arch} (batch 1, seq 16, f32, full width) ...")
-    eager = profile_eager(fwd, params, inputs, name=arch, repeats=1)
-    a100 = profile_accelerated_eager(fwd, params, inputs, name=arch)
-    tpu = profile_accelerated(fwd, params, inputs, name=arch)
+    eager = w.profile("eager-cpu", repeats=1)
+    a100 = w.profile("eager-modeled:a100")
+    tpu = w.profile("compiled:tpu_v5e")
 
     print("\n-- GEMM vs NonGEMM split (the paper's headline view) --")
     print(breakdown_table([eager, a100, tpu]))
@@ -35,6 +35,14 @@ def main(arch: str = "gpt2-xl") -> None:
     print("top-5 op sites on the accelerated platform:")
     for site, t, pct in a100.top_op_sites(k=5):
         print(f"   {str(site):<36} {t * 1e6:9.1f} us  {pct:5.1f}%")
+
+    # paper §4.4: simulated int8 QDQ around every GEMM *raises* the
+    # NonGEMM share — one with_transform call, same backend
+    int8 = w.with_transform(
+        QuantizeDequantTransform("int8")).profile("eager-modeled:a100")
+    print(f"\n-- quantization (modeled eager A100) --\n"
+          f"NonGEMM share fp32 {100 * a100.split['nongemm_frac']:.1f}%  ->  "
+          f"int8-QDQ {100 * int8.split['nongemm_frac']:.1f}%")
 
 
 if __name__ == "__main__":

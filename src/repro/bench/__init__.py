@@ -16,20 +16,23 @@ Text tables are *renderers over the artifact* (``repro.core.report``),
 so CI and humans read the same numbers.
 
     python -m repro.bench run --quick
+    python -m repro.bench list
     python -m repro.bench compare benchmarks/baseline.json results/bench.json
 """
 
 from .schema import (SCHEMA_VERSION, BenchCase, BenchResult, SectionResult,
                      SchemaError, validate_artifact)
-from .cases import (CASES, bench_config, build, profile_case,
-                    profile_case_compiled, quick_cases, tier_cases)
+from .cases import (CASES, bench_config, build, case_workload, profile_case,
+                    profile_case_compiled, profile_case_quantized,
+                    quick_cases, tier_cases, workload_for_case)
 from .runner import (SECTIONS, BenchContext, register_section, run_bench,
                      run_section)
 
 __all__ = [
     "SCHEMA_VERSION", "BenchCase", "BenchResult", "SectionResult",
     "SchemaError", "validate_artifact", "CASES", "bench_config", "build",
-    "profile_case", "profile_case_compiled", "quick_cases", "tier_cases",
-    "SECTIONS", "BenchContext", "register_section", "run_bench",
-    "run_section",
+    "case_workload", "profile_case", "profile_case_compiled",
+    "profile_case_quantized", "quick_cases", "tier_cases",
+    "workload_for_case", "SECTIONS", "BenchContext", "register_section",
+    "run_bench", "run_section",
 ]

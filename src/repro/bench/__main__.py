@@ -1,12 +1,14 @@
 """CLI entry point.
 
     python -m repro.bench run [--quick | --full] [--out results/bench.json]
+    python -m repro.bench list [--json]
     python -m repro.bench compare baseline.json new.json [--tolerance ...]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from typing import List, Optional
 
@@ -42,6 +44,49 @@ def _cmd_compare(args, extra: List[str]) -> int:
     return compare_main(extra)
 
 
+def _cmd_list(args) -> int:
+    """Print every bench/serving case with tiers + resolved Workload spec."""
+    from repro.core import Workload, list_backends
+
+    from .cases import (CASES, SERVING_CASES, serving_config,
+                        workload_for_case)
+
+    def entries(kind, cases):
+        out = []
+        for c in cases:
+            if kind == "serving":
+                # the serving section runs the engine on build_serving's
+                # reduced config: batch is the slot-table size, seq the
+                # shared KV depth, dtype the serving config's own
+                d = Workload(name=c.alias, arch=c.arch, phase="decode",
+                             batch=c.batch, seq=c.seq,
+                             dtype=serving_config(c.arch).dtype).describe()
+                d["builder"] = "serving-engine (build_serving)"
+            else:
+                d = workload_for_case(c).describe()
+            d.update(kind=kind, tiers=list(c.tiers))
+            out.append(d)
+        return out
+
+    rows = entries("zoo", CASES) + entries("serving", SERVING_CASES)
+    if args.json:
+        print(json.dumps({"cases": rows, "backends": list_backends()},
+                         indent=1))
+        return 0
+    hdr = (f"{'case':<24} {'kind':<8} {'arch':<22} {'tiers':<11} "
+           f"{'phase':<8} {'batch':>5} {'seq':>5}  {'dtype':<8} builder")
+    print(hdr)
+    print("-" * len(hdr))
+    for d in rows:
+        print(f"{d['name']:<24} {d['kind']:<8} {d['arch']:<22} "
+              f"{','.join(d['tiers']):<11} {d['phase']:<8} "
+              f"{d['batch']:>5} {d['seq']:>5}  {d['dtype']:<8} "
+              f"{d['builder']}")
+    print(f"\n{len(rows)} case(s); profiler backends: "
+          f"{', '.join(list_backends())}")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     ap = argparse.ArgumentParser(prog="python -m repro.bench")
@@ -60,6 +105,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     run_p.add_argument("--timeout-scale", type=float, default=1.0,
                        help="multiply every per-section timeout")
 
+    list_p = sub.add_parser("list", help="print every bench/serving case "
+                                         "with its tiers and resolved "
+                                         "Workload spec")
+    list_p.add_argument("--json", action="store_true",
+                        help="machine-readable output")
+
     sub.add_parser("compare", add_help=False,
                    help="diff two artifacts (see python -m "
                         "repro.bench.compare --help)")
@@ -67,6 +118,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     if argv and argv[0] == "compare":
         return _cmd_compare(None, argv[1:])
     args = ap.parse_args(argv)
+    if args.cmd == "list":
+        return _cmd_list(args)
     if not args.quick and not args.full:
         args.quick = True
     return _cmd_run(args)

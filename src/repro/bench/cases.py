@@ -24,8 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (ModelProfile, profile_accelerated,
-                        profile_accelerated_eager, profile_eager)
+from repro.core import ModelProfile, QuantizeDequantTransform, Workload
 from repro.models import init_lm, lm_forward
 
 from .schema import BenchCase
@@ -129,6 +128,34 @@ def build_serving(arch: str):
     return cfg, params
 
 
+def _bench_builder(w: Workload):
+    """Workload builder over the memoized full-width bench :func:`build`."""
+    fwd, params, inputs = build(w.arch, w.batch, w.seq)
+    return fwd, (inputs,), params
+
+
+def case_workload(arch: str, batch: int, seq: int,
+                  alias: Optional[str] = None) -> Workload:
+    """The bench regime as a :class:`Workload`: full-width arch, one
+    block-pattern depth repeat, f32, generation-style (batch, seq) inputs."""
+    return Workload(name=alias or f"{arch} b-{batch}", arch=arch,
+                    phase="prefill", batch=batch, seq=seq, dtype="float32",
+                    builder=_bench_builder)
+
+
+def workload_for_case(case: BenchCase) -> Workload:
+    return case_workload(case.arch, case.batch, case.seq, alias=case.alias)
+
+
+@functools.lru_cache(maxsize=None)
+def _profile_case_modeled(alias: str, arch: str, batch: int,
+                          seq: int) -> ModelProfile:
+    """Deterministic modeled eager-A100 profile, shared by profile_case and
+    profile_case_quantized so the fp32 capture+model pass runs once."""
+    return case_workload(arch, batch, seq,
+                         alias=alias).profile("eager-modeled:a100")
+
+
 @functools.lru_cache(maxsize=None)
 def profile_case(alias: str, arch: str, batch: int, seq: int,
                  eager_repeats: int = 3) -> Tuple[ModelProfile, ModelProfile]:
@@ -138,10 +165,9 @@ def profile_case(alias: str, arch: str, batch: int, seq: int,
     profiles, and re-measuring would both waste CI minutes and let the
     sections disagree about the shares they serialize.
     """
-    fwd, params, inputs = build(arch, batch, seq)
-    eager = profile_eager(fwd, params, inputs, name=alias,
-                          repeats=eager_repeats)
-    acc = profile_accelerated_eager(fwd, params, inputs, name=alias)
+    w = case_workload(arch, batch, seq, alias=alias)
+    eager = w.profile("eager-cpu", repeats=eager_repeats)
+    acc = _profile_case_modeled(alias, arch, batch, seq)
     return eager, acc
 
 
@@ -149,8 +175,23 @@ def profile_case(alias: str, arch: str, batch: int, seq: int,
 def profile_case_compiled(alias: str, arch: str, batch: int,
                           seq: int) -> ModelProfile:
     """Beyond-paper column: XLA-compiled + fused on the TPU roofline."""
-    fwd, params, inputs = build(arch, batch, seq)
-    return profile_accelerated(fwd, params, inputs, name=alias)
+    return case_workload(arch, batch, seq,
+                         alias=alias).profile("compiled:tpu_v5e")
+
+
+@functools.lru_cache(maxsize=None)
+def profile_case_quantized(alias: str, arch: str, batch: int, seq: int
+                           ) -> Tuple[ModelProfile, ModelProfile]:
+    """(fp32, int8-QDQ) modeled eager-A100 pair — the paper's §4.4 setting.
+
+    Both sides use the deterministic modeled backend so the comparison (and
+    the CI gate over it) is noise-free; the int8 side wraps every tagged
+    GEMM with simulated quantize/dequantize via the workload transform.
+    """
+    fp32 = _profile_case_modeled(alias, arch, batch, seq)
+    int8 = case_workload(arch, batch, seq, alias=alias).with_transform(
+        QuantizeDequantTransform("int8")).profile("eager-modeled:a100")
+    return fp32, int8
 
 
 def clear_caches() -> None:
@@ -158,5 +199,7 @@ def clear_caches() -> None:
     this after each bench run, and tests/REPLs may call it directly."""
     profile_case.cache_clear()
     profile_case_compiled.cache_clear()
+    profile_case_quantized.cache_clear()
+    _profile_case_modeled.cache_clear()
     build.cache_clear()
     build_serving.cache_clear()

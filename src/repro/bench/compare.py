@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import sys
 from typing import Dict, List, Optional, Tuple
 
@@ -63,7 +64,27 @@ ROW_KEYS = {
     "kernels": ("site",),
     "roofline": ("arch", "shape", "mesh", "label", "model"),
     "serving": ("case", "phase"),
+    "quantized": ("case", "mode", "variant"),
 }
+
+
+def _check_qdq_direction(sec, findings: List["Finding"]) -> None:
+    """Paper §4.4 invariant on the *new* artifact: per (case, mode), the
+    int8-QDQ NonGEMM share must not fall below the fp32 one."""
+    pairs: Dict[Tuple[str, str], Dict[str, float]] = {}
+    for row in sec.rows:
+        v = row.get("nongemm_frac")
+        if isinstance(v, (int, float)):
+            pairs.setdefault((str(row.get("case")), str(row.get("mode"))),
+                             {})[str(row.get("variant"))] = float(v)
+    for (case, mode), by_variant in sorted(pairs.items()):
+        fp32, int8 = by_variant.get("fp32"), by_variant.get("int8-qdq")
+        if fp32 is not None and int8 is not None and int8 + 1e-9 < fp32:
+            findings.append(Finding(
+                "regression", f"quantized[{case}, {mode}]",
+                f"int8-QDQ NonGEMM share {int8:.4f} < fp32 {fp32:.4f} — "
+                f"quantization must not lower the NonGEMM share "
+                f"(paper §4.4)"))
 
 
 @dataclasses.dataclass
@@ -217,7 +238,50 @@ def compare_artifacts(old: BenchResult, new: BenchResult,
         if old.section(new_sec.name) is None:
             findings.append(Finding("info", f"section {new_sec.name}",
                                     "new section not in baseline"))
+
+    q = new.section("quantized")
+    if q is not None and q.status == "ok":
+        _check_qdq_direction(q, findings)
     return findings
+
+
+def render_summary_markdown(old: BenchResult, new: BenchResult,
+                            findings: List[Finding]) -> str:
+    """GitHub-flavored summary of a compare run (``$GITHUB_STEP_SUMMARY``)."""
+    regressions = [f for f in findings if f.severity == "regression"]
+    warnings = [f for f in findings if f.severity == "warning"]
+    infos = [f for f in findings if f.severity == "info"]
+    verdict = "❌ regressions found" if regressions else "✅ no regressions"
+    lines = [
+        "## bench compare",
+        "",
+        f"**{verdict}** — {len(regressions)} regression(s), "
+        f"{len(warnings)} warning(s), {len(infos)} info across "
+        f"{len(old.sections)} baseline section(s) "
+        f"(tier `{old.tier}` → `{new.tier}`)",
+        "",
+    ]
+    if findings:
+        lines += ["| severity | where | message |", "|---|---|---|"]
+        for f in regressions + warnings + infos:
+            msg = f.message.replace("|", "\\|")
+            lines.append(f"| {f.severity} | `{f.where}` | {msg} |")
+    else:
+        lines.append("_baseline and candidate artifacts match._")
+    return "\n".join(lines) + "\n"
+
+
+def write_github_summary(old: BenchResult, new: BenchResult,
+                         findings: List[Finding],
+                         path: Optional[str] = None) -> Optional[str]:
+    """Append the markdown summary to ``path`` or ``$GITHUB_STEP_SUMMARY``
+    (no-op outside CI). Returns the path written, if any."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return None
+    with open(path, "a") as f:
+        f.write(render_summary_markdown(old, new, findings))
+    return path
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -235,6 +299,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--time-tolerance", type=float, default=None,
                     help="relative tolerance on measured wall-clock "
                          "(unchecked unless given; e.g. 3.0)")
+    ap.add_argument("--summary-path", default=None,
+                    help="append a markdown summary to this file (defaults "
+                         "to $GITHUB_STEP_SUMMARY when set, as on GitHub "
+                         "Actions runners)")
     args = ap.parse_args(argv)
 
     try:
@@ -254,6 +322,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"compare: {len(regressions)} regression(s), "
           f"{sum(f.severity == 'warning' for f in findings)} warning(s) "
           f"across {len(old.sections)} baseline section(s)")
+    written = write_github_summary(old, new, findings,
+                                   path=args.summary_path)
+    if written:
+        print(f"summary appended to {written}")
     return 1 if regressions else 0
 
 

@@ -35,9 +35,13 @@ SCHEMA_VERSION = 1
 #: section.status values
 STATUSES = ("ok", "failed", "timeout", "skipped")
 
+#: the tiers a BenchCase may belong to
+KNOWN_TIERS = ("quick", "full")
+
 #: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
 #: present; the serving section's "engine" rows carry throughput instead)
-SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving")
+SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving",
+                  "quantized")
 
 #: row keys required per known section (subset check; rows may carry more)
 SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
@@ -52,6 +56,8 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
     "kernels": ("site", "eager_mb", "xla_mb", "pallas_mb", "allclose"),
     "roofline": ("arch", "shape", "mesh"),
     "serving": ("case", "phase"),
+    "quantized": ("case", "mode", "variant", "gemm_frac", "nongemm_frac",
+                  "group_fracs", "qdq_frac"),
 }
 
 
@@ -68,6 +74,15 @@ class BenchCase:
     batch: int
     seq: int
     tiers: tuple = ("quick", "full")
+
+    def __post_init__(self):
+        # an unknown tier string would silently never run — fail loudly at
+        # construction instead
+        unknown = [t for t in self.tiers if t not in KNOWN_TIERS]
+        if unknown or not self.tiers:
+            raise ValueError(
+                f"BenchCase {self.alias!r}: invalid tiers {self.tiers!r} "
+                f"(known: {KNOWN_TIERS}, at least one required)")
 
     def __iter__(self):
         # unpacks like the legacy (alias, arch, batch, seq) tuples

@@ -17,7 +17,8 @@ from repro.core.microbench import TABLE2_SHAPES, run_micro
 from repro.core.report import profile_row
 
 from .cases import (SERVING_CASES, build, build_serving, profile_case,
-                    profile_case_compiled, tier_cases)
+                    profile_case_compiled, profile_case_quantized,
+                    tier_cases)
 from .runner import BenchContext, SkipSection, register_section
 from .schema import BenchCase
 
@@ -105,6 +106,40 @@ def section_top_table(ctx: BenchContext) -> List[dict]:
         row.update(top_group=g, top_pct=pct)
         rows.append(row)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# §4.4 — quantization: fp32 vs simulated int8 QDQ (workload transform)
+# ---------------------------------------------------------------------------
+
+def quantized_rows(cases: Sequence[BenchCase]) -> List[dict]:
+    """Two rows per case (variant fp32 / int8-qdq), deterministic modeled
+    eager-A100 shares. Structurally asserts the paper's §4.4 finding:
+    the QDQ variant's NonGEMM share must not drop below fp32's."""
+    rows = []
+    for c in cases:
+        fp32, int8 = profile_case_quantized(c.alias, c.arch, c.batch, c.seq)
+        for variant, p in (("fp32", fp32), ("int8-qdq", int8)):
+            row = profile_row(p)
+            row["variant"] = variant
+            row["qdq_frac"] = row["group_fracs"].get("quantization", 0.0)
+            rows.append(row)
+        lo, hi = fp32.split["nongemm_frac"], int8.split["nongemm_frac"]
+        if hi + 1e-9 < lo:
+            raise AssertionError(
+                f"{c.alias}: int8-QDQ NonGEMM share {hi:.4f} fell below "
+                f"fp32's {lo:.4f} — contradicts the paper's quantization "
+                f"finding (QDQ operators aggravate the NonGEMM bottleneck)")
+    return rows
+
+
+@register_section(
+    "quantized",
+    title="§4.4 — quantization raises the NonGEMM share "
+          "(fp32 vs simulated int8 QDQ, modeled eager A100)",
+    timeout_s=240.0)
+def section_quantized(ctx: BenchContext) -> List[dict]:
+    return quantized_rows(ctx.cases)
 
 
 # ---------------------------------------------------------------------------
@@ -338,7 +373,7 @@ def serving_rows(case: BenchCase, requests: int = 6,
 
     # GEMM/NonGEMM split of the two engine programs (modeled eager-A100,
     # the paper's accelerated setting — where NonGEMM shares peak)
-    from repro.core import profile_accelerated_eager
+    from repro.core import Workload
 
     import jax
     import jax.numpy as jnp
@@ -362,8 +397,12 @@ def serving_rows(case: BenchCase, requests: int = 6,
     for phase, fn, args in (
             ("prefill", prefill_fn, (params, toks, lengths)),
             ("decode", decode_fn, (params, token, pos, caches))):
-        p = profile_accelerated_eager(fn, *args, name=alias)
-        row = profile_row(p)
+        w = Workload(
+            name=alias, arch=arch, phase=phase,
+            batch=(1 if phase == "prefill" else max_batch),
+            seq=(bucket if phase == "prefill" else max_len), dtype=cfg.dtype,
+            builder=lambda _w, fn=fn, args=args: (fn, args[1:], args[0]))
+        row = profile_row(w.profile("eager-modeled:a100"))
         row["phase"] = phase
         rows.append(row)
     return rows

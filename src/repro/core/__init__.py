@@ -15,6 +15,9 @@ from .roofline import (RooflineTerms, roofline_from_hlo, group_latency_model,
                        decode_model_flops, attention_flops)
 from .profiler import (ModelProfile, profile_eager, profile_accelerated,
                        profile_accelerated_eager, profile_wallclock)
+from .workload import (Workload, ProfilerBackend, Transform,
+                       QuantizeDequantTransform, register_backend,
+                       get_backend, list_backends)
 from . import microbench, report
 
 __all__ = [
@@ -24,7 +27,11 @@ __all__ = [
     "analyze_hlo", "collective_bytes", "HardwareSpec", "TPU_V5E", "GPU_A100",
     "CPU_HOST", "get_hardware", "RooflineTerms", "roofline_from_hlo",
     "group_latency_model", "gemm_nongemm_split", "train_model_flops",
-    "decode_model_flops", "attention_flops", "ModelProfile", "profile_eager",
-    "profile_accelerated", "profile_accelerated_eager", "profile_wallclock",
+    "decode_model_flops", "attention_flops", "ModelProfile",
+    "Workload", "ProfilerBackend", "Transform", "QuantizeDequantTransform",
+    "register_backend", "get_backend", "list_backends",
+    # deprecated shims (use Workload.profile(backend))
+    "profile_eager", "profile_accelerated", "profile_accelerated_eager",
+    "profile_wallclock",
     "microbench", "report",
 ]

@@ -180,7 +180,9 @@ def parse_computations(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[
                     entry = current.name
                 comps[current.name] = current
             continue
-        if line.strip() == "}":
+        # newer XLA dumps close computations as `} // <name>`; accept an
+        # optional trailing comment after the brace
+        if re.match(r"^\}\s*(//.*)?$", line.strip()):
             current = None
             continue
         m = _INSTR_RE.match(line)

@@ -134,8 +134,3 @@ class ProfilingInterpreter:
         self._run_jaxpr(closed.jaxpr, closed.consts, flat_args, "",
                         timings, [0])
         return timings.get("ops", [])
-
-
-def profile_eager(fn: Callable, *args, repeats: int = 3, **kwargs) -> list[TimedOp]:
-    """Convenience wrapper: eager (per-op dispatched) wall-time profile."""
-    return ProfilingInterpreter(repeats=repeats).run(fn, *args, **kwargs)

@@ -23,8 +23,8 @@ import numpy as np
 
 from .graph import dtype_bytes
 from .hardware import TPU_V5E, HardwareSpec
-from .interpreter import profile_eager
-from .profiler import profile_wallclock
+from .interpreter import ProfilingInterpreter
+from .profiler import _wallclock
 from .taxonomy import OpGroup
 
 
@@ -242,11 +242,11 @@ def run_micro(name: str, shape: Optional[tuple] = None,
     shape = tuple(shape or TABLE2_SHAPES.get(name, (1, 1024, 1024)))
     key = jax.random.PRNGKey(0)
     fn, args = op.make(shape, jnp.dtype(dtype), key)
-    jit_s = profile_wallclock(fn, *args, repeats=repeats)
+    jit_s = _wallclock(fn, *args, repeats=repeats)
     eager_us = 0.0
     if measure_eager:
-        prof = profile_eager(fn, *args, repeats=3)
-        eager_us = 1e6 * sum(t.seconds for t in prof)
+        ops = ProfilingInterpreter(repeats=3).run(fn, *args)
+        eager_us = 1e6 * sum(t.seconds for t in ops)
     out = jax.jit(fn)(*args)
     tpu_us, nbytes = _model_tpu_us(args, out, hw)
     return MicroResult(name=name, group=op.group.value, shape=shape,

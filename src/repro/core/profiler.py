@@ -2,20 +2,27 @@
 
 Two complementary views of the same model:
 
-* :func:`profile_eager` — real wall-clock, one primitive at a time on the
-  host CPU (paper's unaccelerated eager baseline).
-* :func:`profile_accelerated` — ``jit``-compile, parse the HLO, and model
-  per-instruction latency on an accelerator roofline (paper's GPU-accelerated
-  measurements, adapted to TPU v5e per DESIGN.md §3).
+* eager CPU — real wall-clock, one primitive at a time on the host CPU
+  (paper's unaccelerated eager baseline).
+* accelerated — ``jit``-compile, parse the HLO, and model per-instruction
+  latency on an accelerator roofline (paper's GPU-accelerated measurements,
+  adapted to TPU v5e per DESIGN.md §3).
 
 Both produce a :class:`ModelProfile` that post-processing (``report.py``)
 turns into the paper's tables/figures.
+
+The public entry points are the :class:`~repro.core.workload.Workload` /
+profiler-backend pair (``workload.profile("eager-cpu")`` etc. — see
+``repro/core/workload.py``). The legacy ``profile_*`` functions remain as
+deprecated shims over the same private implementations, so their results
+are bit-for-bit identical to the new API.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import defaultdict
 from typing import Callable, Optional
 
@@ -70,16 +77,23 @@ def _aggregate_timed(name: str, mode: str, ops: list[TimedOp]) -> ModelProfile:
                         n_ops=len(ops), timed_ops=ops)
 
 
-def profile_eager(fn: Callable, *args, name: str = "model",
-                  repeats: int = 3, **kwargs) -> ModelProfile:
+# ---------------------------------------------------------------------------
+# Private implementations — shared by the profiler backends (workload.py)
+# and the deprecated profile_* shims below, so both produce identical
+# ModelProfiles.
+# ---------------------------------------------------------------------------
+
+def _eager_profile(fn: Callable, *args, name: str = "model",
+                   repeats: int = 3, **kwargs) -> ModelProfile:
+    """Measured eager CPU: per-primitive dispatched wall time."""
     ops = ProfilingInterpreter(repeats=repeats).run(fn, *args, **kwargs)
     return _aggregate_timed(name, "eager_cpu", ops)
 
 
-def profile_accelerated_eager(fn: Callable, *args, name: str = "model",
-                              hw: HardwareSpec = None,
-                              launch_overhead_s: float = 5e-6,
-                              **kwargs) -> ModelProfile:
+def _accelerated_eager_profile(fn: Callable, *args, name: str = "model",
+                               hw: HardwareSpec = None,
+                               launch_overhead_s: float = 5e-6,
+                               **kwargs) -> ModelProfile:
     """The paper's GPU setting: *eager* accelerated execution.
 
     Each captured operator dispatches as its own kernel: per-op
@@ -108,10 +122,15 @@ def profile_accelerated_eager(fn: Callable, *args, name: str = "model",
                         op_seconds=dict(op_s), n_ops=n)
 
 
-def profile_accelerated(fn: Callable, *args, name: str = "model",
-                        hw: HardwareSpec = TPU_V5E,
-                        hlo_text: Optional[str] = None,
-                        **kwargs) -> ModelProfile:
+def _accelerated_profile(fn: Optional[Callable], *args, name: str = "model",
+                         hw: HardwareSpec = TPU_V5E,
+                         hlo_text: Optional[str] = None,
+                         **kwargs) -> ModelProfile:
+    """Compiled view: jit + HLO parse + per-group roofline latency model.
+
+    ``fn`` may be None when ``hlo_text`` is supplied (e.g. the dry-run's
+    post-SPMD-partitioning dump of a production cell).
+    """
     if hlo_text is None:
         compiled = jax.jit(fn).lower(*args, **kwargs).compile()
         hlo_text = compiled.as_text()
@@ -128,8 +147,7 @@ def profile_accelerated(fn: Callable, *args, name: str = "model",
                         hlo=analysis)
 
 
-def profile_wallclock(fn: Callable, *args, repeats: int = 5,
-                      **kwargs) -> float:
+def _wallclock(fn: Callable, *args, repeats: int = 5, **kwargs) -> float:
     """Compiled end-to-end wall time (for CPU-measurable reduced configs)."""
     jf = jax.jit(fn)
     out = jf(*args, **kwargs)
@@ -140,3 +158,51 @@ def profile_wallclock(fn: Callable, *args, repeats: int = 5,
         jax.block_until_ready(jf(*args, **kwargs))
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims — the old four parallel entry points. Use
+# ``Workload(...).profile(backend)`` instead (repro/core/workload.py).
+# ---------------------------------------------------------------------------
+
+def _warn_deprecated(old: str, backend: str) -> None:
+    warnings.warn(
+        f"repro.core.{old} is deprecated; build a repro.core.Workload and "
+        f"call workload.profile({backend!r}) instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def profile_eager(fn: Callable, *args, name: str = "model",
+                  repeats: int = 3, **kwargs) -> ModelProfile:
+    """Deprecated: use ``Workload(...).profile("eager-cpu")``."""
+    _warn_deprecated("profile_eager", "eager-cpu")
+    return _eager_profile(fn, *args, name=name, repeats=repeats, **kwargs)
+
+
+def profile_accelerated_eager(fn: Callable, *args, name: str = "model",
+                              hw: HardwareSpec = None,
+                              launch_overhead_s: float = 5e-6,
+                              **kwargs) -> ModelProfile:
+    """Deprecated: use ``Workload(...).profile("eager-modeled:<hw>")``."""
+    _warn_deprecated("profile_accelerated_eager", "eager-modeled:a100")
+    return _accelerated_eager_profile(
+        fn, *args, name=name, hw=hw,
+        launch_overhead_s=launch_overhead_s, **kwargs)
+
+
+def profile_accelerated(fn: Callable, *args, name: str = "model",
+                        hw: HardwareSpec = TPU_V5E,
+                        hlo_text: Optional[str] = None,
+                        **kwargs) -> ModelProfile:
+    """Deprecated: use ``Workload(...).profile("compiled:<hw>")``."""
+    _warn_deprecated("profile_accelerated", "compiled:tpu_v5e")
+    return _accelerated_profile(fn, *args, name=name, hw=hw,
+                                hlo_text=hlo_text, **kwargs)
+
+
+def profile_wallclock(fn: Callable, *args, repeats: int = 5,
+                      **kwargs) -> float:
+    """Deprecated: use ``Workload(...).profile("wallclock")`` (returns a
+    ModelProfile whose ``total_seconds`` is this number)."""
+    _warn_deprecated("profile_wallclock", "wallclock")
+    return _wallclock(fn, *args, repeats=repeats, **kwargs)

@@ -15,8 +15,9 @@ from .taxonomy import NONGEMM_GROUPS, OpGroup
 
 GROUP_ORDER = [
     OpGroup.GEMM, OpGroup.NORMALIZATION, OpGroup.ACTIVATION, OpGroup.MEMORY,
-    OpGroup.ELEMENTWISE, OpGroup.LOGIT, OpGroup.ROI, OpGroup.INTERPOLATION,
-    OpGroup.REDUCTION, OpGroup.COLLECTIVE, OpGroup.CONTROL, OpGroup.OTHER,
+    OpGroup.ELEMENTWISE, OpGroup.LOGIT, OpGroup.QUANT, OpGroup.ROI,
+    OpGroup.INTERPOLATION, OpGroup.REDUCTION, OpGroup.COLLECTIVE,
+    OpGroup.CONTROL, OpGroup.OTHER,
 ]
 
 
@@ -216,6 +217,31 @@ def render_roofline_rows(rows: Iterable[dict]) -> str:
     return buf.getvalue()
 
 
+def render_quantized_rows(rows: Iterable[dict]) -> str:
+    """Quantization section: fp32 vs simulated-int8 QDQ shares per case."""
+    buf = io.StringIO()
+    buf.write(f"{'model':<28} {'mode':<18} {'variant':<10} {'GEMM%':>7} "
+              f"{'NonGEMM%':>9} {'QDQ%':>7}\n")
+    rows = list(rows)
+    for r in rows:
+        buf.write(f"{r['case']:<28} {r['mode']:<18} {r['variant']:<10} "
+                  f"{_fmt_pct(r['gemm_frac']):>7} "
+                  f"{_fmt_pct(r['nongemm_frac']):>9} "
+                  f"{_fmt_pct(r.get('qdq_frac', 0.0)):>7}\n")
+
+    def avg(variant):
+        fr = [r["nongemm_frac"] for r in rows if r["variant"] == variant]
+        return sum(fr) / len(fr) if fr else None
+
+    fp32, int8 = avg("fp32"), avg("int8-qdq")
+    if fp32 is not None and int8 is not None:
+        buf.write(f"\naverage NonGEMM share: fp32 {100*fp32:.1f}%  ->  "
+                  f"int8-QDQ {100*int8:.1f}%   (paper §4.4: QDQ operators "
+                  f"aggravate the NonGEMM bottleneck; direction "
+                  f"{'REPRODUCED' if int8 >= fp32 else 'NOT reproduced'})\n")
+    return buf.getvalue()
+
+
 def render_serving_rows(rows: Iterable[dict]) -> str:
     """Serving section: one engine-throughput line per case plus the
     prefill/decode GEMM-vs-NonGEMM split lines."""
@@ -248,6 +274,7 @@ SECTION_RENDERERS = {
     "kernels": render_kernel_rows,
     "roofline": render_roofline_rows,
     "serving": render_serving_rows,
+    "quantized": render_quantized_rows,
 }
 
 

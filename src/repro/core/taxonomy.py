@@ -18,6 +18,12 @@ We add three JAX/TPU-native groups that the torch-eager paper did not need:
     Collective             all-gather / all-reduce / all-to-all / ppermute ...
     Control                scan / while / cond higher-order structure
 
+plus the paper's quantization finding (§4.4: QDQ operators aggravate the
+NonGEMM bottleneck) as its own bucket:
+
+    Quantization           quantize / dequantize fake-quant ops inserted by
+                           the int8 QDQ workload transform (repro.nn)
+
 Classification has two sources, in priority order:
 
 1. **Scope tags** — the `repro.nn` operator library wraps every semantic op in
@@ -45,6 +51,7 @@ class OpGroup(str, enum.Enum):
     MEMORY = "memory"
     ELEMENTWISE = "elementwise"
     LOGIT = "logit"
+    QUANT = "quantization"
     ROI = "roi"
     INTERPOLATION = "interpolation"
     REDUCTION = "reduction"
@@ -66,6 +73,7 @@ NONGEMM_GROUPS = frozenset(
         OpGroup.MEMORY,
         OpGroup.ELEMENTWISE,
         OpGroup.LOGIT,
+        OpGroup.QUANT,
         OpGroup.ROI,
         OpGroup.INTERPOLATION,
         OpGroup.REDUCTION,

@@ -1,0 +1,360 @@
+"""Unified profiling surface: ``Workload`` x ``ProfilerBackend`` x transforms.
+
+The paper's central finding is that the NonGEMM share must be measured *per
+scenario* — eager vs. compiled, CPU vs. accelerator, quantized vs.
+full-precision. This module turns "scenario" into data instead of parallel
+entry points:
+
+* :class:`Workload` — a declarative spec (arch, phase ``prefill | decode |
+  train``, batch, seq, dtype) plus a *builder* that materializes
+  ``(fn, args, params)`` from ``repro.configs`` / ``repro.models``. Every
+  profile in the repo is ``workload.profile(backend)`` and returns the
+  existing :class:`~repro.core.profiler.ModelProfile`.
+
+* :class:`ProfilerBackend` — a string-keyed registry of profiling
+  strategies. Built-ins wrap today's interpreter / capture / HLO-roofline
+  machinery:
+
+      ``eager-cpu``           measured per-primitive wall time (interpreter)
+      ``eager-modeled:<hw>``  per-op roofline + launch overhead (capture)
+      ``compiled:<hw>``       jit + HLO parse + per-group roofline model
+      ``wallclock``           compiled end-to-end wall time
+
+  ``<hw>`` is a :mod:`repro.core.hardware` spec name (``a100``,
+  ``tpu_v5e``, ``cpu``); new hardware is a ``register_backend`` call, not a
+  fifth ``profile_*`` function.
+
+* :class:`Transform` — composable workload rewrites applied by
+  ``Workload.with_transform(...)`` at build time. The first real one,
+  :class:`QuantizeDequantTransform`, reproduces the paper's §4.4 result:
+  simulated int8 QDQ around every tagged GEMM site *raises* the NonGEMM
+  latency share (the quantize/dequantize ops land in the ``quantization``
+  operator group — see ``repro.core.taxonomy`` / ``repro.nn``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from .hardware import BY_NAME as _HW_BY_NAME
+from .hardware import GPU_A100, TPU_V5E, HardwareSpec
+from .profiler import (ModelProfile, _accelerated_eager_profile,
+                       _accelerated_profile, _eager_profile, _wallclock)
+
+PHASES = ("prefill", "decode", "train")
+
+#: dtype -> human variant label used in reports ("fp32" vs "int8-qdq" rows)
+_DTYPE_LABEL = {"float32": "fp32", "bfloat16": "bf16", "float16": "fp16"}
+
+
+# ---------------------------------------------------------------------------
+# Transforms
+# ---------------------------------------------------------------------------
+
+class Transform:
+    """A composable workload rewrite: wraps the built callable.
+
+    Subclasses set ``name`` (used in variant labels and ``bench list``) and
+    implement :meth:`wrap`.
+    """
+
+    name = "transform"
+
+    def wrap(self, fn: Callable, workload: "Workload") -> Callable:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class QuantizeDequantTransform(Transform):
+    """Simulated int8 quantize–dequantize around every tagged GEMM site.
+
+    While the wrapped callable traces/executes, ``repro.nn`` fake-quant is
+    enabled: ``nn.linear`` / ``nn.einsum`` round-trip their operands through
+    the int8 grid under ``ng:quantization:*`` scopes, so the taxonomy
+    attributes the QDQ ops to the NonGEMM ``quantization`` group — the
+    paper's finding that quantization aggravates the NonGEMM bottleneck.
+    """
+
+    def __init__(self, mode: str = "int8"):
+        self.mode = mode
+        self.name = f"{mode}-qdq"
+
+    def wrap(self, fn: Callable, workload: "Workload") -> Callable:
+        mode = self.mode
+
+        def quantized(*args, **kwargs):
+            from repro import nn
+            with nn.fake_quant(mode):
+                return fn(*args, **kwargs)
+
+        return quantized
+
+
+# ---------------------------------------------------------------------------
+# Workload
+# ---------------------------------------------------------------------------
+
+def default_builder(w: "Workload"):
+    """Materialize ``(fn, args, params)`` for a workload from the config zoo.
+
+    Uses the *reduced* (CPU-executable) config of ``w.arch`` — callers that
+    want the full-width bench regime pass their own builder (see
+    ``repro.bench.cases.case_workload``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import (init_lm, init_lm_cache, lm_decode, lm_forward,
+                              lm_loss)
+
+    cfg = reduced(get_config(w.arch)).replace(dtype=w.dtype,
+                                              param_dtype=w.dtype)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (w.batch, w.seq), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (w.batch, w.seq, cfg.d_model),
+                                   jnp.float32)
+
+    if w.phase == "prefill":
+        def fn(params, inputs):
+            return lm_forward(params, inputs, cfg)
+        return fn, (inputs,), params
+
+    if w.phase == "decode":
+        max_len = max(w.seq, 8)
+        caches = init_lm_cache(cfg, w.batch, max_len)
+        token = jnp.ones((w.batch,), jnp.int32)
+        pos = jnp.arange(w.batch, dtype=jnp.int32) % max(w.seq - 1, 1)
+
+        def fn(params, token, pos, caches):
+            return lm_decode(params, token, pos, caches, cfg)[0]
+        return fn, (token, pos, caches), params
+
+    # train: forward + backward of the LM loss
+    import jax as _jax
+    labels = inputs if cfg.input_mode == "tokens" else \
+        _jax.random.randint(key, (w.batch, w.seq), 0, cfg.vocab_size)
+    batch = {"inputs": inputs, "labels": labels}
+
+    def fn(params, batch):
+        loss_fn = lambda p: lm_loss(p, batch, cfg)[0]  # noqa: E731
+        return _jax.grad(loss_fn)(params)
+    return fn, (batch,), params
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Declarative profiling spec; hashable, so memoization keys on it."""
+
+    name: str
+    arch: str
+    phase: str = "prefill"
+    batch: int = 1
+    seq: int = 16
+    dtype: str = "float32"
+    #: (Workload) -> (fn, args, params); full call is fn(params, *args)
+    builder: Optional[Callable] = None
+    transforms: Tuple[Transform, ...] = ()
+
+    def __post_init__(self):
+        if self.phase not in PHASES:
+            raise ValueError(f"unknown workload phase {self.phase!r}; "
+                             f"known: {PHASES}")
+
+    def replace(self, **kw) -> "Workload":
+        return dataclasses.replace(self, **kw)
+
+    def with_transform(self, *transforms: Transform) -> "Workload":
+        """A new Workload with ``transforms`` appended (composable)."""
+        for t in transforms:
+            if not isinstance(t, Transform):
+                raise TypeError(f"expected a Transform, got {t!r}")
+        return self.replace(transforms=self.transforms + tuple(transforms))
+
+    @property
+    def variant(self) -> str:
+        """Report label: transform chain, or the plain dtype (e.g. fp32)."""
+        chain = "+".join(t.name for t in self.transforms)
+        return chain or _DTYPE_LABEL.get(self.dtype, self.dtype)
+
+    def build(self):
+        """Resolve the builder and apply transforms; returns ``(fn, args)``
+        where ``args`` already includes params (``fn(*args)`` runs it)."""
+        builder = self.builder or default_builder
+        fn, args, params = builder(self)
+        for t in self.transforms:
+            fn = t.wrap(fn, self)
+        return fn, (params,) + tuple(args)
+
+    def profile(self, backend="eager-cpu", **opts) -> ModelProfile:
+        """Profile this workload on ``backend`` (name or instance)."""
+        b = get_backend(backend) if isinstance(backend, str) else backend
+        return b.profile(self, **opts)
+
+    def describe(self) -> dict:
+        """Serializable spec (``bench list``, dry-run artifacts, docs)."""
+        builder = self.builder
+        return {
+            "name": self.name, "arch": self.arch, "phase": self.phase,
+            "batch": self.batch, "seq": self.seq, "dtype": self.dtype,
+            "variant": self.variant,
+            "builder": ("default" if builder is None else
+                        getattr(builder, "__qualname__",
+                                getattr(builder, "__name__", "custom"))),
+            "transforms": [t.name for t in self.transforms],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Profiler backends + registry
+# ---------------------------------------------------------------------------
+
+class ProfilerBackend:
+    """One profiling strategy: ``profile(workload, **opts) -> ModelProfile``.
+
+    Anything with this shape can be registered; subclassing is convention,
+    not a requirement.
+    """
+
+    name = "backend"
+
+    def profile(self, workload: Workload, **opts) -> ModelProfile:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class EagerCpuBackend(ProfilerBackend):
+    """Measured eager CPU: each primitive dispatched + wall-timed alone."""
+
+    name = "eager-cpu"
+
+    def profile(self, workload: Workload, repeats: int = 3,
+                **opts) -> ModelProfile:
+        fn, args = workload.build()
+        return _eager_profile(fn, *args, name=workload.name,
+                              repeats=repeats, **opts)
+
+
+class EagerModeledBackend(ProfilerBackend):
+    """Modeled eager accelerator: per-op roofline + kernel-launch overhead."""
+
+    def __init__(self, hw: HardwareSpec = None):
+        self.hw = hw or GPU_A100
+        self.name = f"eager-modeled:{self.hw.name}"
+
+    def profile(self, workload: Workload, launch_overhead_s: float = 5e-6,
+                **opts) -> ModelProfile:
+        fn, args = workload.build()
+        return _accelerated_eager_profile(
+            fn, *args, name=workload.name, hw=self.hw,
+            launch_overhead_s=launch_overhead_s, **opts)
+
+
+class CompiledBackend(ProfilerBackend):
+    """Compiled view: jit + HLO parse + per-group roofline latency model.
+
+    Pass ``hlo_text=`` to analyze an already-lowered module (e.g. the
+    dry-run's post-SPMD-partitioning dump) without building the workload.
+    """
+
+    def __init__(self, hw: HardwareSpec = None):
+        self.hw = hw or TPU_V5E
+        self.name = f"compiled:{self.hw.name}"
+
+    def profile(self, workload: Workload, hlo_text: Optional[str] = None,
+                **opts) -> ModelProfile:
+        if hlo_text is not None:
+            return _accelerated_profile(None, name=workload.name, hw=self.hw,
+                                        hlo_text=hlo_text)
+        fn, args = workload.build()
+        return _accelerated_profile(fn, *args, name=workload.name,
+                                    hw=self.hw, **opts)
+
+
+class WallclockBackend(ProfilerBackend):
+    """Compiled end-to-end wall time, reported as an unattributed profile
+    (``group_seconds`` empty; ``total_seconds`` is the measured best)."""
+
+    name = "wallclock"
+
+    def profile(self, workload: Workload, repeats: int = 5,
+                **opts) -> ModelProfile:
+        fn, args = workload.build()
+        best = _wallclock(fn, *args, repeats=repeats, **opts)
+        return ModelProfile(name=workload.name, mode="wallclock",
+                            group_seconds={}, total_seconds=best,
+                            op_seconds={}, n_ops=0)
+
+
+#: base key -> factory(param_or_None) -> ProfilerBackend
+_BACKENDS: Dict[str, Callable[[Optional[str]], ProfilerBackend]] = {}
+
+
+def register_backend(key: str,
+                     factory: Callable[[Optional[str]], ProfilerBackend]
+                     ) -> None:
+    """Register a backend factory under ``key``.
+
+    ``factory(param)`` receives the text after the first ``:`` of the
+    requested spec (``None`` when absent), e.g. ``get_backend("compiled:
+    tpu_v5e")`` calls the ``compiled`` factory with ``"tpu_v5e"``.
+    """
+    if not key or ":" in key:
+        raise ValueError(f"backend key must be non-empty and ':'-free, "
+                         f"got {key!r}")
+    if key in _BACKENDS:
+        raise ValueError(f"profiler backend {key!r} already registered")
+    _BACKENDS[key] = factory
+
+
+def list_backends() -> list:
+    return sorted(_BACKENDS)
+
+
+def get_backend(spec: str) -> ProfilerBackend:
+    """Resolve ``"key"`` or ``"key:param"`` to a backend instance."""
+    base, sep, param = spec.partition(":")
+    factory = _BACKENDS.get(base)
+    if factory is None:
+        raise KeyError(f"unknown profiler backend {spec!r}; "
+                       f"known: {', '.join(list_backends())}")
+    return factory(param if sep else None)
+
+
+def _hw(param: Optional[str], default: HardwareSpec) -> HardwareSpec:
+    if param is None:
+        return default
+    hw = _HW_BY_NAME.get(param)
+    if hw is None:
+        raise KeyError(f"unknown hardware spec {param!r}; "
+                       f"known: {sorted(_HW_BY_NAME)}")
+    return hw
+
+
+def _no_param(key: str, param: Optional[str]) -> None:
+    if param is not None:
+        raise ValueError(f"backend {key!r} takes no ':<param>' suffix")
+
+
+def _register_builtins() -> None:
+    register_backend(
+        "eager-cpu",
+        lambda p: (_no_param("eager-cpu", p), EagerCpuBackend())[1])
+    register_backend(
+        "eager-modeled", lambda p: EagerModeledBackend(_hw(p, GPU_A100)))
+    register_backend(
+        "compiled", lambda p: CompiledBackend(_hw(p, TPU_V5E)))
+    register_backend(
+        "wallclock",
+        lambda p: (_no_param("wallclock", p), WallclockBackend())[1])
+
+
+_register_builtins()

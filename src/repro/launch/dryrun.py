@@ -43,6 +43,7 @@ from repro import sharding
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core.hlo import KERNEL_REGION_MARKERS, analyze_partitioned
 from repro.core.roofline import roofline_from_hlo
+from repro.core.workload import Workload
 from repro.launch.mesh import make_production_mesh, mesh_chips
 from repro.launch.specs import (abstract_state, input_specs, model_flops,
                                 train_microbatches)
@@ -212,6 +213,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     terms = roofline_from_hlo(hlo, chips, model_flops=mf)
     terms_xla = roofline_from_hlo(hlo_xla, chips, model_flops=mf)
 
+    # the cell as a declarative Workload, profiled through the unified
+    # compiled backend over the already-partitioned module: the paper's
+    # GEMM/NonGEMM split of every production cell, for free
+    workload = Workload(name=f"{arch}/{shape_name}", arch=arch,
+                        phase=shape.kind, batch=shape.global_batch,
+                        seq=shape.seq_len, dtype=cfg.dtype)
+    prof = workload.profile("compiled:tpu_v5e", hlo_text=text)
+
     bytes_per_device = sum(v for k, v in mem.items()
                            if isinstance(v, int) and k != "alias_size_in_bytes"
                            and k != "generated_code_size_in_bytes")
@@ -229,6 +238,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "model_flops": mf,
         "roofline": terms.to_dict(),
         "roofline_xla_only": terms_xla.to_dict(),
+        "workload": workload.describe(),
+        "gemm_nongemm": {
+            "gemm_frac": prof.split["gemm_frac"],
+            "nongemm_frac": prof.split["nongemm_frac"],
+            "mode": prof.mode,
+        },
         **extra,
     }
     return result

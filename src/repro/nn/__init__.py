@@ -56,6 +56,37 @@ def _kernels():
     return kops
 
 
+#: process-global fake-quant switch (None | "int8"), flipped by the
+#: QuantizeDequantTransform while a quantized Workload traces/executes.
+#: When set, every tagged GEMM site wraps its operands in simulated
+#: quantize/dequantize ops — the paper's §4.4 QDQ setting.
+_FAKE_QUANT: Optional[str] = None
+
+_QUANT_MODES = ("int8",)
+
+
+def set_fake_quant(mode: Optional[str]) -> None:
+    global _FAKE_QUANT
+    if mode is not None and mode not in _QUANT_MODES:
+        raise ValueError(f"unknown fake-quant mode {mode!r}; "
+                         f"known: {_QUANT_MODES}")
+    _FAKE_QUANT = mode
+
+
+def get_fake_quant() -> Optional[str]:
+    return _FAKE_QUANT
+
+
+@contextlib.contextmanager
+def fake_quant(mode: str = "int8"):
+    prev = get_fake_quant()
+    set_fake_quant(mode)
+    try:
+        yield
+    finally:
+        set_fake_quant(prev)
+
+
 def tagged(group: OpGroup, name: str):
     """Decorator: run the op body under its ``ng:`` named scope."""
     tag = scope_tag(group, name)
@@ -251,11 +282,49 @@ def scale(x, factor):
 
 
 # ---------------------------------------------------------------------------
+# Quantization (paper §4.4: QDQ operators around accelerated GEMMs)
+# ---------------------------------------------------------------------------
+
+@tagged(OpGroup.QUANT, "quantize")
+def quantize_int8(x):
+    """Simulated symmetric per-tensor int8 quantization.
+
+    Returns ``(q, scale)`` with ``q`` int8 and a scalar f32 scale — the ops
+    a dynamic-quantization runtime dispatches before every int8 GEMM
+    (absmax reduction, divide, round, clamp, cast).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+@tagged(OpGroup.QUANT, "dequantize")
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize_int8` (cast + scale multiply)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quant_int8(x):
+    """Round-trip ``x`` through the int8 grid (quantize -> dequantize)."""
+    q, s = quantize_int8(x)
+    return dequantize_int8(q, s, x.dtype)
+
+
+def _maybe_fake_quant(*operands):
+    if _FAKE_QUANT == "int8":
+        return tuple(fake_quant_int8(o) for o in operands)
+    return operands
+
+
+# ---------------------------------------------------------------------------
 # GEMM sites (tagged so attribution is exact, not heuristic)
 # ---------------------------------------------------------------------------
 
 @tagged(OpGroup.GEMM, "linear")
 def linear(x, w, b=None):
+    x, w = _maybe_fake_quant(x, w)
     y = jnp.einsum("...d,df->...f", x, w,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     if b is not None:
@@ -266,6 +335,7 @@ def linear(x, w, b=None):
 @tagged(OpGroup.GEMM, "einsum")
 def einsum(spec: str, *operands):
     dt = operands[0].dtype
+    operands = _maybe_fake_quant(*operands)
     return jnp.einsum(spec, *operands,
                       preferred_element_type=jnp.float32).astype(dt)
 

@@ -9,7 +9,6 @@ from repro import nn
 from repro.core import OpGroup, capture, harvest_shapes
 from repro.core.graph import estimate_flops
 from repro.core.interpreter import ProfilingInterpreter
-from repro.core.interpreter import profile_eager  # op-level (not ModelProfile)
 
 
 def small_model(x, w1, w2):
@@ -76,7 +75,7 @@ def test_harvest_shapes(args):
 
 
 def test_interpreter_times_every_op(args):
-    ops = profile_eager(small_model, *args, repeats=1)
+    ops = ProfilingInterpreter(repeats=1).run(small_model, *args)
     assert len(ops) > 5
     assert all(t.seconds >= 0 for t in ops)
     tagged = [t for t in ops if t.record.op_site == "rms_norm"]

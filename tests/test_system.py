@@ -1,21 +1,21 @@
 """End-to-end behaviour of the paper's system: profile a real model both
-ways and reproduce the headline claim's *direction* (NonGEMM share grows
-under acceleration), plus report plumbing."""
+ways (through the unified Workload API) and reproduce the headline claim's
+*direction* (NonGEMM share grows under acceleration), plus report
+plumbing."""
 
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.core import (NONGEMM_GROUPS, OpGroup, profile_accelerated,
-                        profile_accelerated_eager, profile_eager)
+from repro.core import NONGEMM_GROUPS, OpGroup, Workload
 from repro.core.report import (breakdown_csv, breakdown_table,
                                group_table, shift_summary, top_group_table)
 from repro.models import init_lm, lm_forward
 
 
 @pytest.fixture(scope="module")
-def model():
+def workload():
     # the paper's LM regime: full width, short generation-style sequence,
     # few layers (latency shares are depth-invariant), f32 eager
     cfg = get_config("llama2-7b").replace(
@@ -28,16 +28,14 @@ def model():
     def fwd(params, tokens):
         return lm_forward(params, tokens, cfg)
 
-    return fwd, params, tokens
+    return Workload(name="llama2-smoke", arch="llama2-7b", batch=1, seq=16,
+                    builder=lambda w: (fwd, (tokens,), params))
 
 
 @pytest.fixture(scope="module")
-def profiles(model):
-    fwd, params, tokens = model
-    eager = profile_eager(fwd, params, tokens, name="llama2-smoke",
-                          repeats=1)
-    acc = profile_accelerated_eager(fwd, params, tokens,
-                                    name="llama2-smoke")
+def profiles(workload):
+    eager = workload.profile("eager-cpu", repeats=1)
+    acc = workload.profile("eager-modeled:a100")
     return eager, acc
 
 
@@ -64,13 +62,26 @@ def test_acceleration_shift_direction(profiles):
     assert acc.split["nongemm_frac"] > eager.split["nongemm_frac"]
 
 
-def test_compilation_closes_the_gap(model, profiles):
+def test_compilation_closes_the_gap(workload, profiles):
     """Beyond-paper (§4.5 direction): XLA fusion on the TPU roofline pulls
     the NonGEMM share back DOWN versus the eager accelerated baseline."""
-    fwd, params, tokens = model
     _, acc_eager = profiles
-    compiled = profile_accelerated(fwd, params, tokens, name="llama2-smoke")
+    compiled = workload.profile("compiled:tpu_v5e")
     assert compiled.split["nongemm_frac"] < acc_eager.split["nongemm_frac"]
+
+
+def test_quantization_raises_nongemm_share(workload, profiles):
+    """Paper §4.4: simulated int8 QDQ around every GEMM site must RAISE
+    the NonGEMM latency share, and the QDQ ops must land in the
+    'quantization' group."""
+    from repro.core import QuantizeDequantTransform
+
+    _, acc = profiles
+    int8 = workload.with_transform(
+        QuantizeDequantTransform("int8")).profile("eager-modeled:a100")
+    assert int8.split["nongemm_frac"] >= acc.split["nongemm_frac"]
+    assert int8.group_seconds.get(OpGroup.QUANT.value, 0.0) > 0.0
+    assert OpGroup.QUANT.value not in acc.group_seconds
 
 
 def test_top_group_is_reported(profiles):

@@ -1,0 +1,362 @@
+"""Unified Workload / ProfilerBackend API: registry semantics, deprecation
+shims (warning + bit-for-bit parity), transforms, ModelProfile edge cases,
+BenchCase tier validation, and the `bench list` / compare plumbing."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import nn
+from repro.core import (ModelProfile, OpGroup, ProfilerBackend,
+                        QuantizeDequantTransform, Transform, Workload,
+                        get_backend, list_backends, register_backend)
+from repro.core.roofline import gemm_nongemm_split
+
+
+def tiny_model(params, x):
+    h = nn.linear(x, params["w1"])
+    h = nn.gelu(h)
+    h = nn.rms_norm(h, jnp.ones((h.shape[-1],), h.dtype))
+    return nn.linear(h, params["w2"])
+
+
+def tiny_builder(w):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (w.batch, w.seq, 32))
+    params = {"w1": jax.random.normal(k, (32, 64)) * 0.1,
+              "w2": jax.random.normal(k, (64, 32)) * 0.1}
+    return tiny_model, (x,), params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return Workload(name="tiny", arch="tiny", batch=2, seq=8,
+                    builder=tiny_builder)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_listed():
+    assert {"eager-cpu", "eager-modeled", "compiled",
+            "wallclock"} <= set(list_backends())
+
+
+def test_unknown_backend_raises_keyerror_with_listing():
+    with pytest.raises(KeyError) as ei:
+        get_backend("does-not-exist")
+    msg = str(ei.value)
+    assert "does-not-exist" in msg and "eager-cpu" in msg
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("eager-cpu", lambda p: None)
+
+
+def test_bad_backend_key_rejected():
+    with pytest.raises(ValueError):
+        register_backend("", lambda p: None)
+    with pytest.raises(ValueError):
+        register_backend("a:b", lambda p: None)
+
+
+def test_parameterized_hw_lookup():
+    assert get_backend("eager-modeled").hw.name == "a100"
+    assert get_backend("eager-modeled:tpu_v5e").hw.name == "tpu_v5e"
+    assert get_backend("compiled").hw.name == "tpu_v5e"
+    with pytest.raises(KeyError, match="unknown hardware"):
+        get_backend("compiled:h100")
+    with pytest.raises(ValueError, match="no ':<param>'"):
+        get_backend("eager-cpu:3")
+
+
+def test_custom_backend_roundtrip(tiny):
+    class CountingBackend(ProfilerBackend):
+        name = "counting"
+
+        def profile(self, workload, **opts):
+            fn, args = workload.build()
+            from repro.core import capture
+            n = len(capture(fn, *args))
+            return ModelProfile(name=workload.name, mode="counting",
+                                group_seconds={}, total_seconds=0.0,
+                                op_seconds={}, n_ops=n)
+
+    if "_test-counting" not in list_backends():  # idempotent across reruns
+        register_backend("_test-counting", lambda p: CountingBackend())
+    p = tiny.profile("_test-counting")
+    assert p.n_ops > 0 and p.mode == "counting"
+
+
+# ---------------------------------------------------------------------------
+# Workload spec + transforms
+# ---------------------------------------------------------------------------
+
+def test_workload_phase_validated():
+    with pytest.raises(ValueError, match="phase"):
+        Workload(name="x", arch="a", phase="serve")
+
+
+def test_with_transform_is_composable_and_typed(tiny):
+    t = QuantizeDequantTransform("int8")
+    w2 = tiny.with_transform(t)
+    assert w2.transforms == (t,) and tiny.transforms == ()
+    assert w2.variant == "int8-qdq" and tiny.variant == "fp32"
+    with pytest.raises(TypeError):
+        tiny.with_transform("not-a-transform")
+
+
+def test_describe_is_serializable(tiny):
+    d = tiny.with_transform(QuantizeDequantTransform()).describe()
+    assert json.loads(json.dumps(d)) == d
+    assert d["builder"] == "tiny_builder"
+    assert d["transforms"] == ["int8-qdq"]
+
+
+def test_qdq_transform_raises_nongemm_share(tiny):
+    fp32 = tiny.profile("eager-modeled:a100")
+    int8 = tiny.with_transform(
+        QuantizeDequantTransform("int8")).profile("eager-modeled:a100")
+    assert OpGroup.QUANT.value not in fp32.group_seconds
+    assert int8.group_seconds.get(OpGroup.QUANT.value, 0.0) > 0.0
+    assert int8.split["nongemm_frac"] >= fp32.split["nongemm_frac"]
+    # QDQ must leave the computation close to the original
+    fn, args = tiny.build()
+    qfn, qargs = tiny.with_transform(QuantizeDequantTransform()).build()
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(qfn(*qargs)),
+                               np.asarray(fn(*args)), atol=0.5, rtol=0.5)
+
+
+def test_fake_quant_state_restored_on_error():
+    class Boom(Transform):
+        name = "boom"
+
+        def wrap(self, fn, workload):
+            def wrapped(*a, **k):
+                raise RuntimeError("boom")
+            return wrapped
+
+    # Boom is innermost: the QDQ context opens, the call raises inside it
+    w = Workload(name="t", arch="tiny", builder=tiny_builder,
+                 transforms=(Boom(), QuantizeDequantTransform()))
+    with pytest.raises(Exception):
+        w.profile("eager-modeled:a100")
+    assert nn.get_fake_quant() is None
+
+
+def test_wallclock_backend_profile(tiny):
+    p = tiny.profile("wallclock", repeats=2)
+    assert p.mode == "wallclock" and p.total_seconds > 0
+    assert p.group_seconds == {} and p.n_ops == 0
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warning fires, results match the new API bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _assert_deprecated(fn, *args, **kwargs):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kwargs)
+    assert any(issubclass(r.category, DeprecationWarning) and
+               "Workload" in str(r.message) for r in rec), \
+        f"{fn.__name__} must emit a DeprecationWarning pointing at Workload"
+    return out
+
+
+def test_shim_accelerated_eager_bit_for_bit(tiny):
+    from repro.core import profile_accelerated_eager
+    fn, args = tiny.build()
+    old = _assert_deprecated(profile_accelerated_eager, fn, *args,
+                             name="tiny")
+    new = tiny.profile("eager-modeled:a100")
+    assert old.mode == new.mode
+    assert old.group_seconds == new.group_seconds
+    assert old.op_seconds == new.op_seconds
+    assert old.total_seconds == new.total_seconds
+    assert old.n_ops == new.n_ops
+
+
+def test_shim_accelerated_bit_for_bit(tiny):
+    from repro.core import profile_accelerated
+    fn, args = tiny.build()
+    old = _assert_deprecated(profile_accelerated, fn, *args, name="tiny")
+    new = tiny.profile("compiled:tpu_v5e")
+    assert old.mode == new.mode
+    assert old.group_seconds == new.group_seconds
+    assert old.n_ops == new.n_ops
+
+
+def test_shim_eager_warns_and_matches_structure(tiny):
+    from repro.core import profile_eager
+    fn, args = tiny.build()
+    old = _assert_deprecated(profile_eager, fn, *args, name="tiny",
+                             repeats=1)
+    new = tiny.profile("eager-cpu", repeats=1)
+    # wall-clock differs run to run; structure must be identical
+    assert old.mode == new.mode == "eager_cpu"
+    assert old.n_ops == new.n_ops
+    assert set(old.group_seconds) == set(new.group_seconds)
+    assert set(old.op_seconds) == set(new.op_seconds)
+
+
+def test_shim_wallclock_warns(tiny):
+    from repro.core import profile_wallclock
+    fn, args = tiny.build()
+    t = _assert_deprecated(profile_wallclock, fn, *args, repeats=1)
+    assert t > 0
+
+
+# ---------------------------------------------------------------------------
+# ModelProfile / split edge cases
+# ---------------------------------------------------------------------------
+
+def _profile(groups, name="p", mode="m"):
+    total = sum(groups.values())
+    return ModelProfile(name=name, mode=mode, group_seconds=dict(groups),
+                        total_seconds=total, op_seconds={}, n_ops=0)
+
+
+def test_split_empty_profile():
+    p = _profile({})
+    assert p.split == {"gemm_s": 0.0, "nongemm_s": 0, "other_s": 0.0,
+                       "gemm_frac": 0.0, "nongemm_frac": 0.0}
+    assert p.top_nongemm_groups() == []
+
+
+def test_split_all_gemm():
+    p = _profile({OpGroup.GEMM.value: 2.0})
+    assert p.split["gemm_frac"] == 1.0
+    assert p.split["nongemm_frac"] == 0.0
+    assert p.top_nongemm_groups(k=3) == []
+
+
+def test_split_control_is_neither_gemm_nor_nongemm():
+    s = gemm_nongemm_split({OpGroup.GEMM.value: 1.0,
+                            OpGroup.MEMORY.value: 1.0,
+                            OpGroup.CONTROL.value: 2.0})
+    assert s["gemm_frac"] == pytest.approx(0.25)
+    assert s["nongemm_frac"] == pytest.approx(0.25)
+    assert s["other_s"] == pytest.approx(2.0)
+
+
+def test_top_nongemm_groups_tie_break_is_stable():
+    p = _profile({OpGroup.MEMORY.value: 1.0,
+                  OpGroup.ACTIVATION.value: 1.0,
+                  OpGroup.GEMM.value: 2.0})
+    tops = p.top_nongemm_groups(k=2)
+    # ties keep insertion order (stable sort) and exclude GEMM
+    assert [g for g, _, _ in tops] == [OpGroup.MEMORY.value,
+                                       OpGroup.ACTIVATION.value]
+    assert all(pct == pytest.approx(25.0) for _, _, pct in tops)
+    assert p.top_nongemm_groups(k=1) == [tops[0]]
+
+
+def test_quant_group_is_nongemm():
+    from repro.core import NONGEMM_GROUPS
+    assert OpGroup.QUANT in NONGEMM_GROUPS
+    s = gemm_nongemm_split({OpGroup.GEMM.value: 1.0,
+                            OpGroup.QUANT.value: 1.0})
+    assert s["nongemm_frac"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# BenchCase tier validation + bench list subcommand
+# ---------------------------------------------------------------------------
+
+def test_benchcase_rejects_unknown_tier():
+    from repro.bench.schema import BenchCase
+    with pytest.raises(ValueError, match="tiers"):
+        BenchCase("x", "gpt2-xl", 1, 16, ("quik",))
+    with pytest.raises(ValueError, match="tiers"):
+        BenchCase("x", "gpt2-xl", 1, 16, ())
+    # valid ones still construct
+    assert BenchCase("x", "gpt2-xl", 1, 16, ("quick",)).tiers == ("quick",)
+
+
+def test_bench_list_subcommand(capsys):
+    from repro.bench.__main__ import main
+    assert main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "gpt2-xl b-1" in out and "serve stablelm b-4" in out
+    assert "eager-modeled" in out
+
+    assert main(["list", "--json"]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert {"eager-cpu", "wallclock"} <= set(d["backends"])
+    by_name = {c["name"]: c for c in d["cases"]}
+    assert by_name["gpt2-xl b-1"]["tiers"] == ["quick", "full"]
+    assert by_name["serve stablelm b-4"]["phase"] == "decode"
+
+
+# ---------------------------------------------------------------------------
+# quantized section plumbing: schema, compare gate, summary markdown
+# ---------------------------------------------------------------------------
+
+def _quantized_artifact(fp32=0.4, int8=0.6):
+    from repro.bench.schema import BenchResult, SectionResult
+
+    def row(variant, frac):
+        return {"case": "c", "mode": "eager_a100", "variant": variant,
+                "total_s": 1.0, "gemm_frac": 1.0 - frac,
+                "nongemm_frac": frac, "group_fracs": {}, "qdq_frac": 0.1,
+                "n_ops": 2}
+
+    return BenchResult(
+        tier="quick", backend="cpu", jax_version="0",
+        sections=[SectionResult(name="quantized", title="q", status="ok",
+                                wall_s=0.1,
+                                rows=[row("fp32", fp32), row("int8-qdq",
+                                                             int8)])])
+
+
+def test_quantized_artifact_schema_roundtrip():
+    from repro.bench.schema import BenchResult, validate_artifact
+    art = _quantized_artifact()
+    assert validate_artifact(art.to_dict()) == []
+    assert BenchResult.from_json(art.to_json()).section("quantized")
+
+
+def test_compare_gates_qdq_direction():
+    from repro.bench.compare import compare_artifacts
+    good = _quantized_artifact(fp32=0.4, int8=0.6)
+    bad = _quantized_artifact(fp32=0.6, int8=0.4)
+    ok = compare_artifacts(good, good)
+    assert not [f for f in ok if f.severity == "regression"]
+    findings = compare_artifacts(bad, bad)
+    regs = [f for f in findings if f.severity == "regression"]
+    assert regs and "paper §4.4" in regs[0].message
+
+
+def test_compare_writes_github_summary(tmp_path):
+    from repro.bench.compare import (compare_artifacts,
+                                     render_summary_markdown,
+                                     write_github_summary)
+    art = _quantized_artifact()
+    findings = compare_artifacts(art, art)
+    md = render_summary_markdown(art, art, findings)
+    assert "bench compare" in md and "no regressions" in md
+    path = tmp_path / "summary.md"
+    assert write_github_summary(art, art, findings, str(path)) == str(path)
+    assert "bench compare" in path.read_text()
+    # no path and no $GITHUB_STEP_SUMMARY -> no-op
+    import os
+    old = os.environ.pop("GITHUB_STEP_SUMMARY", None)
+    try:
+        assert write_github_summary(art, art, findings) is None
+    finally:
+        if old is not None:
+            os.environ["GITHUB_STEP_SUMMARY"] = old
+
+
+def test_quantized_renderer():
+    from repro.core.report import render_section
+    art = _quantized_artifact()
+    text = render_section(art.section("quantized"))
+    assert "int8-qdq" in text and "REPRODUCED" in text
