@@ -1,6 +1,11 @@
 """Continuous-batching serving example: per-slot positions over one cache.
 
-    PYTHONPATH=src python examples/serve_batched.py [arch]
+    PYTHONPATH=src python examples/serve_batched.py [arch] [--fused]
+
+``--fused`` compiles both engine programs through the operator-fusion
+fast path (repro.core.fusion): residual-add→norm and SwiGLU run as single
+fused Pallas-kernel-backed ops, numerically identical to the unfused
+engine.
 
 Fills a request queue with mixed-length prompts and lets the Engine stream
 them through a fixed slot table (static shapes: pad the batch, not the
@@ -21,10 +26,10 @@ from repro.models import init_lm
 from repro.serving import Engine
 
 
-def main(arch: str = "stablelm-3b") -> None:
+def main(arch: str = "stablelm-3b", fused: bool = False) -> None:
     cfg = reduced(get_config(arch))
     params = init_lm(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_batch=4, max_len=160)
+    eng = Engine(cfg, params, max_batch=4, max_len=160, fused=fused)
 
     rng = np.random.RandomState(0)
     for i in range(10):
@@ -48,4 +53,6 @@ def main(arch: str = "stablelm-3b") -> None:
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "stablelm-3b")
+    args = [a for a in sys.argv[1:] if a != "--fused"]
+    main(args[0] if args else "stablelm-3b",
+         fused="--fused" in sys.argv[1:])

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import ModelProfile, QuantizeDequantTransform, Workload
+from repro.core import (FusionTransform, ModelProfile,
+                        QuantizeDequantTransform, Workload)
 from repro.models import init_lm, lm_forward
 
 from .schema import BenchCase
@@ -194,12 +195,36 @@ def profile_case_quantized(alias: str, arch: str, batch: int, seq: int
     return fp32, int8
 
 
+@functools.lru_cache(maxsize=None)
+def profile_case_fused(alias: str, arch: str, batch: int, seq: int
+                       ) -> Tuple[ModelProfile, ModelProfile,
+                                  ModelProfile, ModelProfile]:
+    """The fusion 2×2: (fp32, fused, int8-qdq, int8-qdq+fused).
+
+    All four are the deterministic modeled eager-A100 view (the paper's
+    accelerated setting). The fused variants route through
+    :class:`~repro.core.fusion.FusionTransform`: the callable executes
+    under ``nn.fuse()`` and the captured stream goes through the
+    graph-level rewriter, so the NonGEMM chains cost one kernel launch +
+    kernel-boundary IO instead of their unfused op trains (paper §6).
+    """
+    fp32, int8 = profile_case_quantized(alias, arch, batch, seq)
+    base = case_workload(arch, batch, seq, alias=alias)
+    fused = base.with_transform(FusionTransform()) \
+        .profile("eager-modeled:a100")
+    int8_fused = base.with_transform(QuantizeDequantTransform("int8"),
+                                     FusionTransform()) \
+        .profile("eager-modeled:a100")
+    return fp32, fused, int8, int8_fused
+
+
 def clear_caches() -> None:
     """Drop memoized params/profiles (can hold GBs); the runner calls
     this after each bench run, and tests/REPLs may call it directly."""
     profile_case.cache_clear()
     profile_case_compiled.cache_clear()
     profile_case_quantized.cache_clear()
+    profile_case_fused.cache_clear()
     _profile_case_modeled.cache_clear()
     build.cache_clear()
     build_serving.cache_clear()

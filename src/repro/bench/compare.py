@@ -23,6 +23,18 @@ What is gated, and how:
                        so they are only checked when ``--time-tolerance``
                        is given (relative, e.g. 3.0 = up to 4x slower).
 
+Two paper invariants are re-checked on the *candidate* artifact itself
+(not just diffed against the baseline):
+
+  * quantized §4.4  — per (case, mode), the int8-QDQ NonGEMM share must
+                      not fall below fp32's;
+  * fusion §6       — per (case, mode), every fused variant must have
+                      strictly lower total modeled latency and NonGEMM
+                      share than its unfused twin, and at least one case
+                      must keep a NonGEMM share >= 0.15 after fusion
+                      (fusion reduces but does not eliminate the
+                      bottleneck).
+
 Rows present only in the *new* artifact are additions, never regressions.
 Exit codes: 0 clean, 1 regressions found, 2 bad input.
 """
@@ -35,7 +47,8 @@ import os
 import sys
 from typing import Dict, List, Optional, Tuple
 
-from .schema import SHARE_SECTIONS, BenchResult, SchemaError
+from .schema import (SHARE_SECTIONS, BenchResult, SchemaError,
+                     check_fusion_invariant)
 
 SHARE_KEYS = ("gemm_frac", "nongemm_frac")
 
@@ -65,6 +78,7 @@ ROW_KEYS = {
     "roofline": ("arch", "shape", "mesh", "label", "model"),
     "serving": ("case", "phase"),
     "quantized": ("case", "mode", "variant"),
+    "fusion": ("case", "mode", "variant"),
 }
 
 
@@ -85,6 +99,13 @@ def _check_qdq_direction(sec, findings: List["Finding"]) -> None:
                 f"int8-QDQ NonGEMM share {int8:.4f} < fp32 {fp32:.4f} — "
                 f"quantization must not lower the NonGEMM share "
                 f"(paper §4.4)"))
+
+
+def _check_fusion_direction(sec, findings: List["Finding"]) -> None:
+    """Paper §6 invariant on the *new* artifact — the same
+    ``check_fusion_invariant`` the fusion section gates itself with."""
+    for where, message in check_fusion_invariant(sec.rows):
+        findings.append(Finding("regression", where, message))
 
 
 @dataclasses.dataclass
@@ -242,6 +263,9 @@ def compare_artifacts(old: BenchResult, new: BenchResult,
     q = new.section("quantized")
     if q is not None and q.status == "ok":
         _check_qdq_direction(q, findings)
+    fu = new.section("fusion")
+    if fu is not None and fu.status == "ok":
+        _check_fusion_direction(fu, findings)
     return findings
 
 
@@ -268,6 +292,22 @@ def render_summary_markdown(old: BenchResult, new: BenchResult,
             lines.append(f"| {f.severity} | `{f.where}` | {msg} |")
     else:
         lines.append("_baseline and candidate artifacts match._")
+    fu = new.section("fusion")
+    if fu is not None and fu.status == "ok" and fu.rows:
+        lines += [
+            "",
+            "### fusion (§6: NonGEMM share before/after fusion, candidate)",
+            "",
+            "| case | mode | variant | total | GEMM% | NonGEMM% | fused% |",
+            "|---|---|---|---:|---:|---:|---:|",
+        ]
+        for r in fu.rows:
+            lines.append(
+                f"| {r.get('case')} | {r.get('mode')} | {r.get('variant')} "
+                f"| {float(r.get('total_s', 0.0))*1e3:.3f}ms "
+                f"| {100*float(r.get('gemm_frac', 0.0)):.1f} "
+                f"| {100*float(r.get('nongemm_frac', 0.0)):.1f} "
+                f"| {100*float(r.get('fused_frac', 0.0)):.1f} |")
     return "\n".join(lines) + "\n"
 
 

@@ -143,6 +143,9 @@ def run_bench(tier: str = "quick",
         cases=list(ctx.cases),
         sections=results,
         meta={"n_devices": jax.device_count(),
-              "all_cases": [c.to_dict() for c in CASES]},
+              "all_cases": [c.to_dict() for c in CASES],
+              # per-section wall_s lives on each SectionResult; the total
+              # here makes run-cost regressions greppable from the artifact
+              "total_wall_s": sum(r.wall_s for r in results)},
         schema_version=SCHEMA_VERSION,
     )

@@ -41,7 +41,67 @@ KNOWN_TIERS = ("quick", "full")
 #: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
 #: present; the serving section's "engine" rows carry throughput instead)
 SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving",
-                  "quantized")
+                  "quantized", "fusion")
+
+#: fusion section (paper §6): unfused variant -> its fused twin, per
+#: (case, mode). Both the section's own gate (repro.bench.sections) and
+#: the compare CLI's candidate invariant read THIS table — one source.
+FUSION_VARIANT_PAIRS = (("fp32", "fused"), ("int8-qdq", "int8-qdq+fused"))
+
+#: the §6 residual bottleneck: at least one case must keep this much
+#: NonGEMM share after fusion (fusion reduces, never eliminates)
+FUSION_RESIDUAL_FLOOR = 0.15
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_fusion_invariant(rows: Sequence[dict]) -> List[tuple]:
+    """The §6 invariant over fusion-section rows; ``[(where, message)]``.
+
+    Single implementation shared by the section's own gate
+    (``repro.bench.sections.fusion_rows`` raises on any violation) and
+    the compare CLI (``repro.bench.compare`` turns each into a
+    regression Finding on the candidate artifact). Checks per
+    (case, mode) pair of :data:`FUSION_VARIANT_PAIRS`: fused total
+    modeled latency strictly below unfused, fused NonGEMM share strictly
+    below unfused, and — across all pairs — at least one post-fusion
+    NonGEMM share >= :data:`FUSION_RESIDUAL_FLOOR`.
+    """
+    violations: List[tuple] = []
+    pairs: Dict[tuple, Dict[str, dict]] = {}
+    for row in rows:
+        pairs.setdefault((str(row.get("case")), str(row.get("mode"))),
+                         {})[str(row.get("variant"))] = row
+    max_fused_share = None
+    for (case, mode), by_variant in sorted(pairs.items()):
+        for unfused_v, fused_v in FUSION_VARIANT_PAIRS:
+            u, f = by_variant.get(unfused_v), by_variant.get(fused_v)
+            if u is None or f is None:
+                continue
+            where = f"fusion[{case}, {mode}]"
+            ut, ft = u.get("total_s"), f.get("total_s")
+            if _is_num(ut) and _is_num(ft) and not float(ft) < float(ut):
+                violations.append((where, (
+                    f"{fused_v} total modeled latency {ft:.4g}s is not "
+                    f"below {unfused_v}'s {ut:.4g}s — fusion must reduce "
+                    f"total latency (paper §6)")))
+            un, fn = u.get("nongemm_frac"), f.get("nongemm_frac")
+            if _is_num(un) and _is_num(fn):
+                if not float(fn) < float(un):
+                    violations.append((where, (
+                        f"{fused_v} NonGEMM share {fn:.4f} is not below "
+                        f"{unfused_v}'s {un:.4f} — fusion must lower the "
+                        f"NonGEMM share (paper §6)")))
+                max_fused_share = max(max_fused_share or 0.0, float(fn))
+    if max_fused_share is not None and \
+            max_fused_share < FUSION_RESIDUAL_FLOOR:
+        violations.append(("section fusion", (
+            f"max post-fusion NonGEMM share {max_fused_share:.4f} < "
+            f"{FUSION_RESIDUAL_FLOOR} on every case — the paper's §6 "
+            f"residual bottleneck is not reproduced")))
+    return violations
 
 #: row keys required per known section (subset check; rows may carry more)
 SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
@@ -58,6 +118,8 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
     "serving": ("case", "phase"),
     "quantized": ("case", "mode", "variant", "gemm_frac", "nongemm_frac",
                   "group_fracs", "qdq_frac"),
+    "fusion": ("case", "mode", "variant", "total_s", "gemm_frac",
+               "nongemm_frac", "group_fracs", "fused_frac"),
 }
 
 

@@ -17,10 +17,10 @@ from repro.core.microbench import TABLE2_SHAPES, run_micro
 from repro.core.report import profile_row
 
 from .cases import (SERVING_CASES, build, build_serving, profile_case,
-                    profile_case_compiled, profile_case_quantized,
-                    tier_cases)
+                    profile_case_compiled, profile_case_fused,
+                    profile_case_quantized, tier_cases)
 from .runner import BenchContext, SkipSection, register_section
-from .schema import BenchCase
+from .schema import BenchCase, check_fusion_invariant
 
 
 def _results_root() -> str:
@@ -140,6 +140,46 @@ def quantized_rows(cases: Sequence[BenchCase]) -> List[dict]:
     timeout_s=240.0)
 def section_quantized(ctx: BenchContext) -> List[dict]:
     return quantized_rows(ctx.cases)
+
+
+# ---------------------------------------------------------------------------
+# §6 — operator fusion: unfused vs fused NonGEMM chains (FusionTransform)
+# ---------------------------------------------------------------------------
+
+def fusion_rows(cases: Sequence[BenchCase]) -> List[dict]:
+    """The fusion 2×2 per case: fp32 / fused / int8-qdq / int8-qdq+fused.
+
+    Deterministic modeled eager-A100 shares. Structurally asserts the
+    paper's §6 shape via the same ``check_fusion_invariant`` the compare
+    CLI re-runs on candidates: every fused variant strictly lower on
+    total modeled latency AND NonGEMM share than its unfused twin, with
+    a post-fusion NonGEMM share >= ``FUSION_RESIDUAL_FLOOR`` on at least
+    one case — fusion reduces but does not eliminate the bottleneck.
+    """
+    rows: List[dict] = []
+    for c in cases:
+        fp32, fused, int8, int8_fused = profile_case_fused(
+            c.alias, c.arch, c.batch, c.seq)
+        for variant, p in (("fp32", fp32), ("fused", fused),
+                           ("int8-qdq", int8),
+                           ("int8-qdq+fused", int8_fused)):
+            row = profile_row(p)
+            row["variant"] = variant
+            row["fused_frac"] = row["group_fracs"].get("fused", 0.0)
+            rows.append(row)
+    violations = check_fusion_invariant(rows)
+    if violations:
+        raise AssertionError("; ".join(f"{w}: {m}" for w, m in violations))
+    return rows
+
+
+@register_section(
+    "fusion",
+    title="§6 — operator fusion lowers but does not eliminate the NonGEMM "
+          "share (FusionTransform 2×2, modeled eager A100)",
+    timeout_s=240.0)
+def section_fusion(ctx: BenchContext) -> List[dict]:
+    return fusion_rows(ctx.cases)
 
 
 # ---------------------------------------------------------------------------

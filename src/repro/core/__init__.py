@@ -18,6 +18,8 @@ from .profiler import (ModelProfile, profile_eager, profile_accelerated,
 from .workload import (Workload, ProfilerBackend, Transform,
                        QuantizeDequantTransform, register_backend,
                        get_backend, list_backends)
+from .fusion import (FusionPattern, FusionReport, FusionTransform,
+                     FUSION_PATTERNS, fuse_records, fusion_report)
 from . import microbench, report
 
 __all__ = [
@@ -29,6 +31,8 @@ __all__ = [
     "group_latency_model", "gemm_nongemm_split", "train_model_flops",
     "decode_model_flops", "attention_flops", "ModelProfile",
     "Workload", "ProfilerBackend", "Transform", "QuantizeDequantTransform",
+    "FusionPattern", "FusionReport", "FusionTransform", "FUSION_PATTERNS",
+    "fuse_records", "fusion_report",
     "register_backend", "get_backend", "list_backends",
     # deprecated shims (use Workload.profile(backend))
     "profile_eager", "profile_accelerated", "profile_accelerated_eager",

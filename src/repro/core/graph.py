@@ -58,6 +58,11 @@ class OpRecord:
     bytes_accessed: float   # inputs+outputs, trip-count weighted
     trip_count: int = 1
     params: dict = dataclasses.field(default_factory=dict, repr=False)
+    #: jaxpr-var identities (id() ints, literals excluded) — only meaningful
+    #: within one captured stream; the fusion pass uses them for an exact
+    #: producer->consumer dataflow check instead of a shape heuristic
+    in_var_ids: tuple = dataclasses.field(default=(), repr=False)
+    out_var_ids: tuple = dataclasses.field(default=(), repr=False)
 
     @property
     def is_gemm(self) -> bool:
@@ -184,6 +189,9 @@ def _walk(jaxpr: _core.Jaxpr, records: list, scope_prefix: str, trip: int,
                 out_shapes=out_shapes, out_dtypes=out_dtypes, flops=flops,
                 bytes_accessed=nbytes, trip_count=trip,
                 params=dict(eqn.params) if prim == "dot_general" else {},
+                in_var_ids=tuple(id(v) for v in eqn.invars
+                                 if not isinstance(v, _core.Literal)),
+                out_var_ids=tuple(id(v) for v in eqn.outvars),
             )
         )
         counter[0] += 1

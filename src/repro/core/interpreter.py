@@ -116,6 +116,9 @@ class ProfilingInterpreter:
                 flops=estimate_flops(prim, eqn.params, in_shapes, out_shapes),
                 bytes_accessed=estimate_bytes(in_shapes, in_dtypes,
                                               out_shapes, out_dtypes, prim),
+                in_var_ids=tuple(id(v) for v in eqn.invars
+                                 if not isinstance(v, _core.Literal)),
+                out_var_ids=tuple(id(v) for v in eqn.outvars),
             )
             counter[0] += 1
             timings.setdefault("ops", []).append(TimedOp(rec, best))

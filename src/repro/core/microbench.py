@@ -206,6 +206,60 @@ def _mk_swiglu(shape, dtype, key):
     return nn.swiglu, (_rng(k1, shape, dtype), _rng(k2, shape, dtype))
 
 
+# --- fused operators (repro.core.fusion) — unfused twins sit above so the
+# --- micro table shows each chain side by side with its fused rewrite
+
+
+@register("add_rms_norm", OpGroup.NORMALIZATION)
+def _mk_add_rms_norm(shape, dtype, key):
+    """The unfused residual-add→rms_norm chain as one measurable site."""
+    from repro import nn
+    k1, k2 = jax.random.split(key)
+    x, r = _rng(k1, shape, dtype), _rng(k2, shape, dtype)
+    scale = jnp.ones((shape[-1],), dtype)
+    return (lambda x, r: nn.add_rms_norm(x, r, scale)[0]), (x, r)
+
+
+@register("fused_add_rms_norm", OpGroup.FUSED)
+def _mk_fused_add_rms_norm(shape, dtype, key):
+    from repro import nn
+    k1, k2 = jax.random.split(key)
+    x, r = _rng(k1, shape, dtype), _rng(k2, shape, dtype)
+    scale = jnp.ones((shape[-1],), dtype)
+
+    def f(x, r):
+        with nn.fuse():
+            return nn.add_rms_norm(x, r, scale)[0]
+    return f, (x, r)
+
+
+@register("fused_rope", OpGroup.FUSED)
+def _mk_fused_rope(shape, dtype, key):
+    from repro import nn
+    if len(shape) < 4:
+        shape = (1, max(shape[0], 1), 8, 64)
+    x = _rng(key, shape, dtype)
+    pos = jnp.arange(shape[1])[None, :]
+
+    def f(x):
+        with nn.fuse():
+            return nn.apply_rope(x, pos)
+    return f, (x,)
+
+
+@register("fused_dequant_add_rms_norm", OpGroup.FUSED)
+def _mk_fused_dequant_add_rms_norm(shape, dtype, key):
+    """The QDQ epilogue: int8 operand in, one pass to the normed output."""
+    from repro import nn
+    k1, k2 = jax.random.split(key)
+    q = jax.random.randint(k1, shape, -127, 128, jnp.int8)
+    qs = jnp.float32(0.02)
+    res = _rng(k2, shape, dtype)
+    scale = jnp.ones((shape[-1],), dtype)
+    return (lambda q, res: nn.dequant_add_rms_norm(q, qs, res, scale)[0]), \
+        (q, res)
+
+
 #: Paper Table 2 example shapes (the realistic defaults).
 TABLE2_SHAPES: Dict[str, tuple] = {
     "relu": (2, 64, 533),
@@ -225,6 +279,11 @@ TABLE2_SHAPES: Dict[str, tuple] = {
     "rope": (1, 128, 32, 128),
     "cross_entropy": (256, 32000),
     "swiglu": (1, 10, 11008),
+    # fused operators next to their unfused twins (repro.core.fusion)
+    "add_rms_norm": (1, 10, 4096),
+    "fused_add_rms_norm": (1, 10, 4096),
+    "fused_rope": (1, 128, 32, 128),
+    "fused_dequant_add_rms_norm": (1, 10, 4096),
 }
 
 

@@ -93,6 +93,7 @@ def _eager_profile(fn: Callable, *args, name: str = "model",
 def _accelerated_eager_profile(fn: Callable, *args, name: str = "model",
                                hw: HardwareSpec = None,
                                launch_overhead_s: float = 5e-6,
+                               record_rewrite: Optional[Callable] = None,
                                **kwargs) -> ModelProfile:
     """The paper's GPU setting: *eager* accelerated execution.
 
@@ -107,6 +108,8 @@ def _accelerated_eager_profile(fn: Callable, *args, name: str = "model",
 
     hw = hw or GPU_A100
     records = capture(fn, *args, **kwargs)
+    if record_rewrite is not None:
+        records = record_rewrite(records)
     group_s: dict = defaultdict(float)
     op_s: dict = defaultdict(float)
     n = 0

@@ -24,6 +24,16 @@ NonGEMM bottleneck) as its own bucket:
     Quantization           quantize / dequantize fake-quant ops inserted by
                            the int8 QDQ workload transform (repro.nn)
 
+and the fusion finding (§6: operator fusion reduces but does not eliminate
+the NonGEMM bottleneck) as a first-class attribution target:
+
+    Fused                  NonGEMM chains rewritten into single Pallas-
+                           kernel launches by the fusion pass
+                           (repro.core.fusion) or executed through the
+                           fused ``repro.nn`` fast path under ``nn.fuse()``.
+                           Still NonGEMM work — the residual share after
+                           fusion is exactly the paper's §6 number.
+
 Classification has two sources, in priority order:
 
 1. **Scope tags** — the `repro.nn` operator library wraps every semantic op in
@@ -52,6 +62,7 @@ class OpGroup(str, enum.Enum):
     ELEMENTWISE = "elementwise"
     LOGIT = "logit"
     QUANT = "quantization"
+    FUSED = "fused"
     ROI = "roi"
     INTERPOLATION = "interpolation"
     REDUCTION = "reduction"
@@ -74,6 +85,7 @@ NONGEMM_GROUPS = frozenset(
         OpGroup.ELEMENTWISE,
         OpGroup.LOGIT,
         OpGroup.QUANT,
+        OpGroup.FUSED,
         OpGroup.ROI,
         OpGroup.INTERPOLATION,
         OpGroup.REDUCTION,

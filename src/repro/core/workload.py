@@ -29,7 +29,13 @@ entry points:
   :class:`QuantizeDequantTransform`, reproduces the paper's §4.4 result:
   simulated int8 QDQ around every tagged GEMM site *raises* the NonGEMM
   latency share (the quantize/dequantize ops land in the ``quantization``
-  operator group — see ``repro.core.taxonomy`` / ``repro.nn``).
+  operator group — see ``repro.core.taxonomy`` / ``repro.nn``). The
+  second, :class:`~repro.core.fusion.FusionTransform`, reproduces §6:
+  fusing the dominant NonGEMM chains lowers the share but leaves a
+  substantial residual. Transforms may also implement
+  :meth:`Transform.rewrite_records` to rewrite the captured op stream in
+  capture-based backends. The two compose into the 2×2
+  fp32 / fused / int8-qdq / int8-qdq+fused.
 """
 
 from __future__ import annotations
@@ -63,6 +69,17 @@ class Transform:
 
     def wrap(self, fn: Callable, workload: "Workload") -> Callable:
         raise NotImplementedError
+
+    def rewrite_records(self, records, workload: "Workload"):
+        """Optional post-capture rewrite of the OpRecord stream.
+
+        Capture-based backends (``eager-modeled:<hw>``) run every
+        transform's rewrite, in transform order, over the records they
+        captured — this is how graph-level passes (``FusionTransform``)
+        change the modeled view without touching the callable. The
+        default is the identity.
+        """
+        return records
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"{type(self).__name__}({self.name!r})"
@@ -211,6 +228,20 @@ class Workload:
         }
 
 
+def _compose_record_rewrites(workload: Workload):
+    """Chain the workload transforms' record rewrites (None when trivial)."""
+    if not any(type(t).rewrite_records is not Transform.rewrite_records
+               for t in workload.transforms):
+        return None
+
+    def rewrite(records):
+        for t in workload.transforms:
+            records = t.rewrite_records(records, workload)
+        return records
+
+    return rewrite
+
+
 # ---------------------------------------------------------------------------
 # Profiler backends + registry
 # ---------------------------------------------------------------------------
@@ -255,7 +286,8 @@ class EagerModeledBackend(ProfilerBackend):
         fn, args = workload.build()
         return _accelerated_eager_profile(
             fn, *args, name=workload.name, hw=self.hw,
-            launch_overhead_s=launch_overhead_s, **opts)
+            launch_overhead_s=launch_overhead_s,
+            record_rewrite=_compose_record_rewrites(workload), **opts)
 
 
 class CompiledBackend(ProfilerBackend):

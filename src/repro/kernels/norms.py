@@ -118,6 +118,108 @@ def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
 
 
 # ---------------------------------------------------------------------------
+# fused int8-dequantize + residual-add + RMSNorm (the QDQ epilogue of the
+# fusion pass: paper §4.4 QDQ operators + §6 fusion, one HBM pass)
+# ---------------------------------------------------------------------------
+
+def _dequant_add_rms_kernel(q_ref, s_ref, res_ref, w_ref, y_ref, r_ref, *,
+                            eps: float, zero_centered: bool):
+    x = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+    s = x + res_ref[...].astype(jnp.float32)
+    r_ref[...] = s.astype(r_ref.dtype)
+    sr = r_ref[...].astype(jnp.float32)  # normalize the rounded value
+    ms = jnp.mean(sr * sr, axis=-1, keepdims=True)
+    y = sr * jax.lax.rsqrt(ms + eps)
+    w = w_ref[...].astype(jnp.float32)
+    if zero_centered:
+        w = 1.0 + w
+    y_ref[...] = (y * w[None, :]).astype(y_ref.dtype)
+
+
+def dequant_add_rms_norm(q, qscale, residual, scale, eps: float = 1e-6,
+                         zero_centered: bool = False, block_rows: int = 8,
+                         interpret: bool = False):
+    """``y = rms_norm(q * qscale + residual)``; returns ``(y, q*qscale+res)``.
+
+    ``q`` is the int8 tensor a quantized GEMM epilogue hands back,
+    ``qscale`` its scalar f32 scale. Unfused this is a dequantize pass, an
+    add pass and a norm pass over HBM; here the int8 tensor is read once
+    (at 1/4 the float bytes) and everything else happens in VMEM.
+    """
+    d = q.shape[-1]
+    q2, r = _pad_rows(q.reshape(_rows(q.shape), d), block_rows)
+    res2, _ = _pad_rows(residual.reshape(_rows(residual.shape), d),
+                        block_rows)
+    s11 = jnp.asarray(qscale, jnp.float32).reshape(1, 1)
+    y, new_res = pl.pallas_call(
+        functools.partial(_dequant_add_rms_kernel, eps=eps,
+                          zero_centered=zero_centered),
+        grid=(q2.shape[0] // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(res2.shape, residual.dtype),
+            jax.ShapeDtypeStruct(res2.shape, residual.dtype),
+        ],
+        interpret=interpret,
+    )(q2, s11, res2, scale)
+    return (y[:r].reshape(residual.shape), new_res[:r].reshape(residual.shape))
+
+
+# ---------------------------------------------------------------------------
+# fused residual-add + LayerNorm (the pre-norm boundary of layernorm stacks)
+# ---------------------------------------------------------------------------
+
+def _add_ln_kernel(x_ref, res_ref, w_ref, b_ref, y_ref, r_ref, *,
+                   eps: float):
+    s = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+    r_ref[...] = s.astype(r_ref.dtype)
+    sr = r_ref[...].astype(jnp.float32)  # normalize the rounded value
+    mean = jnp.mean(sr, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(sr - mean), axis=-1, keepdims=True)
+    y = (sr - mean) * jax.lax.rsqrt(var + eps)
+    y = y * w_ref[...].astype(jnp.float32)[None, :] \
+        + b_ref[...].astype(jnp.float32)[None, :]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def fused_add_layer_norm(x, residual, scale, bias, eps: float = 1e-5,
+                         block_rows: int = 8, interpret: bool = False):
+    """residual += x; y = layer_norm(residual) — one HBM pass."""
+    d = x.shape[-1]
+    x2, r = _pad_rows(x.reshape(_rows(x.shape), d), block_rows)
+    res2, _ = _pad_rows(residual.reshape(_rows(x.shape), d), block_rows)
+    y, new_res = pl.pallas_call(
+        functools.partial(_add_ln_kernel, eps=eps),
+        grid=(x2.shape[0] // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, x.dtype),
+            jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        ],
+        interpret=interpret,
+    )(x2, res2, scale, bias)
+    return (y[:r].reshape(x.shape), new_res[:r].reshape(x.shape))
+
+
+# ---------------------------------------------------------------------------
 # LayerNorm
 # ---------------------------------------------------------------------------
 

@@ -1,15 +1,28 @@
 """jit'd public wrappers over the Pallas kernels (the ``repro.nn`` backend).
 
-Every function takes ``interpret: bool`` — True runs the kernel body in
-Python on CPU (this container's validation mode), False emits the real
-Mosaic TPU kernel. Signatures match the ``repro.nn`` call sites exactly so
-``nn.set_backend("pallas"/"pallas_interpret")`` swaps implementations
-without touching model code.
+Every wrapper takes a keyword-only ``interpret: bool | None``:
+
+* ``None`` (the default) resolves via :func:`default_interpret` — interpret
+  mode whenever no TPU is attached, so the kernels (and the fused model
+  paths built on them) exercise end-to-end in CPU-only CI without every
+  call site threading the flag. ``REPRO_PALLAS_INTERPRET=0|1`` overrides
+  the auto-detection either way.
+* ``True`` runs the kernel body in Python on CPU (validation mode).
+* ``False`` emits the real Mosaic TPU kernel.
+
+Resolution happens *outside* the jit (``interpret`` is a static argname),
+so flipping the environment variable between calls retraces instead of
+reusing a stale cache entry. Each public name is :func:`_autojit` applied
+to the raw kernel entry point — one place owns the contract, so a new
+kernel cannot accidentally skip the auto-interpret default. Signatures
+match the ``repro.nn`` call sites so ``nn.set_backend("pallas"/
+"pallas_interpret")`` swaps implementations without touching model code.
 """
 
 from __future__ import annotations
 
-from functools import partial
+import functools
+import os
 from typing import Optional
 
 import jax
@@ -17,62 +30,70 @@ import jax
 from repro.kernels import flash_attention as _fa
 from repro.kernels import nms as _nms
 from repro.kernels import norms as _norms
+from repro.kernels import rope as _rope
 from repro.kernels import softmax_xent as _xent
 from repro.kernels import swiglu as _glu
 
-
-@partial(jax.jit, static_argnames=("eps", "zero_centered", "interpret"))
-def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False,
-             interpret: bool = False):
-    return _norms.rms_norm(x, scale, eps=eps, zero_centered=zero_centered,
-                           interpret=interpret)
+#: env override for the CI auto-default ("1"/"true" forces interpret mode,
+#: "0"/"false" forces real Mosaic lowering; empty counts as unset)
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 
-@partial(jax.jit, static_argnames=("eps", "zero_centered", "interpret"))
-def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
-                       zero_centered: bool = False, interpret: bool = False):
-    return _norms.fused_add_rms_norm(x, residual, scale, eps=eps,
-                                     zero_centered=zero_centered,
-                                     interpret=interpret)
+def default_interpret() -> bool:
+    """True when the Pallas kernels should run in interpret mode here.
+
+    No TPU attached -> interpret (the CPU-only CI / laptop case);
+    ``REPRO_PALLAS_INTERPRET`` overrides in either direction. An empty
+    value counts as unset (the CI-YAML way to clear a variable), falling
+    through to the TPU auto-detection.
+    """
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None and env.strip():
+        return env.strip().lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("eps", "interpret"))
-def layer_norm(x, scale, bias, eps: float = 1e-5, interpret: bool = False):
-    return _norms.layer_norm(x, scale, bias, eps=eps, interpret=interpret)
+def _resolve(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def swiglu(gate, up, interpret: bool = False):
-    return _glu.swiglu(gate, up, interpret=interpret)
+def _autojit(kernel_fn, static):
+    """Public wrapper factory: jit ``kernel_fn`` with ``static`` argnames
+    and resolve the keyword-only ``interpret`` flag before the jit sees
+    it (``interpret`` must be in ``static``)."""
+    assert "interpret" in static
+    jitted = jax.jit(kernel_fn, static_argnames=static)
+
+    @functools.wraps(kernel_fn)
+    def wrapper(*args, interpret: Optional[bool] = None, **kwargs):
+        return jitted(*args, interpret=_resolve(interpret), **kwargs)
+
+    return wrapper
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def geglu(gate, up, interpret: bool = False):
-    return _glu.geglu(gate, up, interpret=interpret)
-
-
-@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "scale",
+rms_norm = _autojit(_norms.rms_norm,
+                    static=("eps", "zero_centered", "block_rows",
+                            "interpret"))
+fused_add_rms_norm = _autojit(_norms.fused_add_rms_norm,
+                              static=("eps", "zero_centered", "block_rows",
+                                      "interpret"))
+dequant_add_rms_norm = _autojit(_norms.dequant_add_rms_norm,
+                                static=("eps", "zero_centered",
+                                        "block_rows", "interpret"))
+layer_norm = _autojit(_norms.layer_norm,
+                      static=("eps", "block_rows", "interpret"))
+fused_add_layer_norm = _autojit(_norms.fused_add_layer_norm,
+                                static=("eps", "block_rows", "interpret"))
+fused_rope = _autojit(_rope.rope,
+                      static=("base", "fraction", "block_rows", "interpret"))
+swiglu = _autojit(_glu.swiglu,
+                  static=("block_rows", "block_cols", "interpret"))
+geglu = _autojit(_glu.geglu,
+                 static=("block_rows", "block_cols", "interpret"))
+flash_attention = _autojit(_fa.flash_attention,
+                           static=("causal", "window", "q_offset", "scale",
                                    "block_q", "block_k", "interpret"))
-def flash_attention(q, k, v, causal: bool = True,
-                    window: Optional[int] = None, q_offset: int = 0,
-                    scale: Optional[float] = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False):
-    return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset, scale=scale,
-                               block_q=block_q, block_k=block_k,
-                               interpret=interpret)
-
-
-@partial(jax.jit, static_argnames=("block_rows", "block_vocab", "interpret"))
-def softmax_xent(logits, labels, block_rows: int = 8,
-                 block_vocab: int = 2048, interpret: bool = False):
-    return _xent.softmax_xent(logits, labels, block_rows=block_rows,
-                              block_vocab=block_vocab, interpret=interpret)
-
-
-@partial(jax.jit, static_argnames=("iou_threshold", "score_threshold",
-                                   "interpret"))
-def nms(boxes, scores, iou_threshold: float = 0.5,
-        score_threshold: float = 0.0, interpret: bool = False):
-    return _nms.nms(boxes, scores, iou_threshold=iou_threshold,
-                    score_threshold=score_threshold, interpret=interpret)
+softmax_xent = _autojit(_xent.softmax_xent,
+                        static=("block_rows", "block_vocab", "interpret"))
+nms = _autojit(_nms.nms,
+               static=("iou_threshold", "score_threshold", "interpret"))

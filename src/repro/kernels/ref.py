@@ -31,6 +31,38 @@ def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
     return rms_norm(r, scale, eps=eps, zero_centered=zero_centered), r
 
 
+def dequant_add_rms_norm(q, qscale, residual, scale, eps: float = 1e-6,
+                         zero_centered: bool = False):
+    # dequant and add both in f32; only the sum is rounded to the storage
+    # dtype (the fused kernel never materializes the dequantized operand)
+    s = q.astype(jnp.float32) * jnp.asarray(qscale, jnp.float32) \
+        + residual.astype(jnp.float32)
+    r = s.astype(residual.dtype)
+    return rms_norm(r, scale, eps=eps, zero_centered=zero_centered), r
+
+
+def fused_add_layer_norm(x, residual, scale, bias, eps: float = 1e-5):
+    r = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return layer_norm(r, scale, bias, eps=eps), r
+
+
+def rope(x, positions, base: float = 10000.0, fraction: float = 1.0):
+    """Rotary embedding on (B, S, H, D) — mirrors ``repro.nn.apply_rope``."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    theta = positions[..., None].astype(jnp.float32) * freq
+    cos = jnp.cos(theta)[:, :, None, :]
+    sin = jnp.sin(theta)[:, :, None, :]
+    x1 = x_rot[..., :half].astype(jnp.float32)
+    x2 = x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1) \
+        if rot < d else out.astype(x.dtype)
+
+
 def layer_norm(x, scale, bias, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     mean = jnp.mean(xf, axis=-1, keepdims=True)

@@ -432,7 +432,7 @@ def _attention_impl(q, k, v, cfg: ModelConfig, window, q_offset: int = 0):
         from repro.kernels import ops as kops
         return kops.flash_attention(
             q, k, v, causal=cfg.causal, window=window, q_offset=q_offset,
-            interpret=backend == "pallas_interpret")
+            interpret=None if backend == "pallas" else True)
     return flash_attention_jnp(
         q, k, v, causal=cfg.causal, window=window, q_offset=q_offset,
         chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,

@@ -89,6 +89,21 @@ def _apply_norm(p, x, cfg: ModelConfig):
                        zero_centered=cfg.zero_centered_norm)
 
 
+def _add_norm(p, a, x, cfg: ModelConfig):
+    """``h = norm(a + x)``; returns ``(h, a + x)``.
+
+    The pre-norm block boundary every transformer pays twice per layer.
+    Routed through ``nn.add_rms_norm`` / ``nn.add_layer_norm`` so that
+    under ``nn.fuse()`` (the FusionTransform / ``Engine(fused=True)`` fast
+    path) the pair executes as ONE fused kernel-backed operator.
+    """
+    if cfg.norm == "layernorm":
+        return nn.add_layer_norm(a, x, p["scale"].astype(x.dtype),
+                                 p["bias"].astype(x.dtype))
+    return nn.add_rms_norm(a, x, p["scale"].astype(x.dtype),
+                           zero_centered=cfg.zero_centered_norm)
+
+
 def _is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
     return cfg.is_moe and layer_idx >= cfg.first_dense_layers
 
@@ -151,9 +166,11 @@ def block_forward(params, x, cfg: ModelConfig, kind: str, positions,
     a = checkpoint_name(a, "proj_out")
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
-    x = nn.residual_add(x, a)
+    h, x = _add_norm(params["norm2"], a, x, cfg)
+    # both streams keep the block-boundary constraint the pre-fusion code
+    # placed on the sum (h fed the MLP GEMMs from a constrained tensor)
     x = shard(x, "batch", "seq", "embed")
-    h = _apply_norm(params["norm2"], x, cfg)
+    h = shard(h, "batch", "seq", "embed")
     if moe_layer:
         f, aux = M.moe_forward(params["moe"], h, cfg)
     else:
@@ -192,9 +209,9 @@ def block_prefill(params, x, cfg: ModelConfig, kind: str, positions,
         return nn.residual_add(x, a), cache, aux
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
-    x = nn.residual_add(x, a)
+    h, x = _add_norm(params["norm2"], a, x, cfg)
     x = shard(x, "batch", "seq", "embed")
-    h = _apply_norm(params["norm2"], x, cfg)
+    h = shard(h, "batch", "seq", "embed")
     if moe_layer:
         f, aux = M.moe_forward(params["moe"], h, cfg)
     else:
@@ -234,8 +251,7 @@ def block_decode(params, x, cfg: ModelConfig, kind: str, cache, pos,
         return nn.residual_add(x, a), cache
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
-    x = nn.residual_add(x, a)
-    h = _apply_norm(params["norm2"], x, cfg)
+    h, x = _add_norm(params["norm2"], a, x, cfg)
     if moe_layer:
         f, _ = M.moe_forward(params["moe"], h, cfg)
     else:

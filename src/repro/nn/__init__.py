@@ -9,16 +9,28 @@ torch.fx at ``nn.Module`` boundaries.
 A process-global backend switch selects the implementation:
 
     "jnp"              pure jax.numpy (reference; used for dry-run/compile)
-    "pallas"           fused Pallas TPU kernels where available (real TPU)
+    "pallas"           fused Pallas TPU kernels where available (real TPU;
+                       auto-falls back to interpret mode off-TPU — see
+                       repro.kernels.ops.default_interpret)
     "pallas_interpret" Pallas kernels in interpret mode (CPU correctness)
 
 Ops without a Pallas kernel always use the jnp path.
+
+A second orthogonal switch, ``nn.fuse()`` (the execution half of
+``repro.core.fusion``), routes the fusable call sites through single fused
+operators tagged ``ng:fused:<name>``: ``add_rms_norm`` / ``add_layer_norm``
+(residual add + following norm), ``swiglu``/``geglu``, ``apply_rope``, the
+int8 QDQ round-trip, and the ``dequant_add_rms_norm`` epilogue. Under the
+Pallas backends each fused op is one kernel launch; under jnp the same
+fused math runs under the fused scope so both profiling views attribute it
+to the ``fused`` operator group.
 """
 
 from __future__ import annotations
 
 import contextlib
 import functools
+import itertools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -56,6 +68,40 @@ def _kernels():
     return kops
 
 
+def _interpret():
+    """Per-call interpret flag for the kernel backends.
+
+    ``pallas_interpret`` forces interpret mode; plain ``pallas`` passes
+    None so ``repro.kernels.ops`` auto-detects (interpret off-TPU).
+    """
+    return True if _BACKEND == "pallas_interpret" else None
+
+
+#: process-global fusion switch (the execution half of repro.core.fusion):
+#: while True, the fusable nn call sites emit single fused operators under
+#: ``ng:fused:`` tags instead of their unfused op chains.
+_FUSION = False
+
+
+def set_fusion(enabled: bool) -> None:
+    global _FUSION
+    _FUSION = bool(enabled)
+
+
+def fusion_enabled() -> bool:
+    return _FUSION
+
+
+@contextlib.contextmanager
+def fuse(enabled: bool = True):
+    prev = fusion_enabled()
+    set_fusion(enabled)
+    try:
+        yield
+    finally:
+        set_fusion(prev)
+
+
 #: process-global fake-quant switch (None | "int8"), flipped by the
 #: QuantizeDequantTransform while a quantized Workload traces/executes.
 #: When set, every tagged GEMM site wraps its operands in simulated
@@ -87,14 +133,27 @@ def fake_quant(mode: str = "int8"):
         set_fake_quant(prev)
 
 
+#: monotone per-process invocation counter for tagged ops (see below)
+_CALLS = itertools.count()
+
+
 def tagged(group: OpGroup, name: str):
-    """Decorator: run the op body under its ``ng:`` named scope."""
+    """Decorator: run the op body under its ``ng:`` named scope.
+
+    An inner ``c<N>`` marker scope makes every *invocation* distinct in
+    the name stack: back-to-back calls of the same op (rope on q then on
+    k) would otherwise be indistinguishable, and the fusion rewriter
+    (``repro.core.fusion``) would merge them into one site run — modeling
+    N real kernel launches as one. The marker carries no ``ng:`` tag, so
+    classification is unaffected.
+    """
     tag = scope_tag(group, name)
 
     def deco(fn):
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
-            with jax.named_scope(tag):
+            with jax.named_scope(tag), \
+                    jax.named_scope(f"c{next(_CALLS)}"):
                 return fn(*args, **kwargs)
         wrapper.op_group = group
         wrapper.op_tag = tag
@@ -110,7 +169,7 @@ def tagged(group: OpGroup, name: str):
 def layer_norm(x, scale, bias, eps: float = 1e-5):
     if _BACKEND != "jnp":
         return _kernels().layer_norm(x, scale, bias, eps=eps,
-                                     interpret=_BACKEND == "pallas_interpret")
+                                     interpret=_interpret())
     xf = x.astype(jnp.float32)
     mean = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
@@ -124,7 +183,7 @@ def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False):
     if _BACKEND != "jnp":
         return _kernels().rms_norm(x, scale, eps=eps,
                                    zero_centered=zero_centered,
-                                   interpret=_BACKEND == "pallas_interpret")
+                                   interpret=_interpret())
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(ms + eps)
@@ -140,7 +199,7 @@ def fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
     if _BACKEND != "jnp":
         return _kernels().fused_add_rms_norm(
             x, residual, scale, eps=eps, zero_centered=zero_centered,
-            interpret=_BACKEND == "pallas_interpret")
+            interpret=_interpret())
     r = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
     return rms_norm(r, scale, eps=eps, zero_centered=zero_centered), r
 
@@ -167,15 +226,19 @@ def silu(x):
 @tagged(OpGroup.ACTIVATION, "swiglu")
 def swiglu(gate, up):
     """SiLU(gate) * up — fused Activation + Elem-wise mul."""
+    if _FUSION:
+        return _fused_swiglu(gate, up)
     if _BACKEND != "jnp":
         return _kernels().swiglu(gate, up,
-                                 interpret=_BACKEND == "pallas_interpret")
+                                 interpret=_interpret())
     return (gate * jax.nn.sigmoid(gate.astype(jnp.float32)).astype(gate.dtype)
             ) * up
 
 
 @tagged(OpGroup.ACTIVATION, "geglu")
 def geglu(gate, up):
+    if _FUSION:
+        return _fused_geglu(gate, up)
     return jax.nn.gelu(gate, approximate=True) * up
 
 
@@ -253,6 +316,8 @@ def kv_cache_update(cache, new, index):
 @tagged(OpGroup.MEMORY, "apply_rope")
 def apply_rope(x, positions, base: float = 10000.0, fraction: float = 1.0):
     """Rotary embedding on (B, S, H, D); optionally on a leading fraction."""
+    if _FUSION:
+        return _fused_rope(x, positions, base=base, fraction=fraction)
     d = x.shape[-1]
     rot = int(d * fraction) // 2 * 2
     x_rot, x_pass = x[..., :rot], x[..., rot:]
@@ -285,6 +350,18 @@ def scale(x, factor):
 # Quantization (paper §4.4: QDQ operators around accelerated GEMMs)
 # ---------------------------------------------------------------------------
 
+def _quantize_int8_impl(x):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8_impl(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
 @tagged(OpGroup.QUANT, "quantize")
 def quantize_int8(x):
     """Simulated symmetric per-tensor int8 quantization.
@@ -293,21 +370,22 @@ def quantize_int8(x):
     a dynamic-quantization runtime dispatches before every int8 GEMM
     (absmax reduction, divide, round, clamp, cast).
     """
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf))
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
-    return q, scale
+    return _quantize_int8_impl(x)
 
 
 @tagged(OpGroup.QUANT, "dequantize")
 def dequantize_int8(q, scale, dtype=jnp.float32):
     """Inverse of :func:`quantize_int8` (cast + scale multiply)."""
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+    return _dequantize_int8_impl(q, scale, dtype)
 
 
 def fake_quant_int8(x):
-    """Round-trip ``x`` through the int8 grid (quantize -> dequantize)."""
+    """Round-trip ``x`` through the int8 grid (quantize -> dequantize).
+
+    Under ``nn.fuse()`` the whole round-trip runs as one fused op — the
+    QDQ launch train is the §4.4 overhead the fusion pass targets."""
+    if _FUSION:
+        return _fused_qdq(x)
     q, s = quantize_int8(x)
     return dequantize_int8(q, s, x.dtype)
 
@@ -316,6 +394,111 @@ def _maybe_fake_quant(*operands):
     if _FAKE_QUANT == "int8":
         return tuple(fake_quant_int8(o) for o in operands)
     return operands
+
+
+# ---------------------------------------------------------------------------
+# Fused operators (paper §6; the execution half of repro.core.fusion)
+#
+# Each is ONE operator — one ng:fused: tag, one Pallas kernel launch on the
+# kernel backends — implementing a NonGEMM chain the fusion pass rewrites.
+# The jnp fallbacks call the untagged repro.kernels.ref oracles so no inner
+# ng: tag shadows the fused attribution.
+# ---------------------------------------------------------------------------
+
+def _ref():
+    from repro.kernels import ref
+    return ref
+
+
+@tagged(OpGroup.FUSED, "fused_add_rms_norm")
+def _fused_add_rms_norm(x, residual, scale, eps: float = 1e-6,
+                        zero_centered: bool = False):
+    if _BACKEND != "jnp":
+        return _kernels().fused_add_rms_norm(
+            x, residual, scale, eps=eps, zero_centered=zero_centered,
+            interpret=_interpret())
+    return _ref().fused_add_rms_norm(x, residual, scale, eps=eps,
+                                     zero_centered=zero_centered)
+
+
+@tagged(OpGroup.FUSED, "fused_add_layer_norm")
+def _fused_add_layer_norm(x, residual, scale, bias, eps: float = 1e-5):
+    if _BACKEND != "jnp":
+        return _kernels().fused_add_layer_norm(
+            x, residual, scale, bias, eps=eps, interpret=_interpret())
+    return _ref().fused_add_layer_norm(x, residual, scale, bias, eps=eps)
+
+
+def add_rms_norm(x, residual, scale, eps: float = 1e-6,
+                 zero_centered: bool = False):
+    """``(rms_norm(x + residual), x + residual)`` — the pre-norm boundary.
+
+    Unfused this is a residual_add op followed by an rms_norm op; under
+    ``nn.fuse()`` it is one fused operator (kernel-backed on the Pallas
+    backends). The model zoo's blocks call this at every norm that follows
+    a residual add, which is what routes ``lm_decode`` (and the serving
+    engine built on it) through the fused fast path.
+    """
+    if _FUSION:
+        return _fused_add_rms_norm(x, residual, scale, eps=eps,
+                                   zero_centered=zero_centered)
+    r = residual_add(x, residual)
+    return rms_norm(r, scale, eps=eps, zero_centered=zero_centered), r
+
+
+def add_layer_norm(x, residual, scale, bias, eps: float = 1e-5):
+    """LayerNorm twin of :func:`add_rms_norm` (returns ``(y, x+residual)``)."""
+    if _FUSION:
+        return _fused_add_layer_norm(x, residual, scale, bias, eps=eps)
+    r = residual_add(x, residual)
+    return layer_norm(r, scale, bias, eps=eps), r
+
+
+@tagged(OpGroup.FUSED, "fused_dequant_add_rms_norm")
+def dequant_add_rms_norm(q, qscale, residual, scale, eps: float = 1e-6,
+                         zero_centered: bool = False):
+    """Fused QDQ epilogue: ``rms_norm(q * qscale + residual)`` (+ new res).
+
+    The dequantize→add→norm chain a quantized GEMM epilogue dispatches as
+    three HBM passes, as one (the int8 operand read at a quarter of the
+    float bytes).
+    """
+    if _BACKEND != "jnp":
+        return _kernels().dequant_add_rms_norm(
+            q, qscale, residual, scale, eps=eps,
+            zero_centered=zero_centered, interpret=_interpret())
+    return _ref().dequant_add_rms_norm(q, qscale, residual, scale, eps=eps,
+                                       zero_centered=zero_centered)
+
+
+@tagged(OpGroup.FUSED, "fused_swiglu")
+def _fused_swiglu(gate, up):
+    if _BACKEND != "jnp":
+        return _kernels().swiglu(gate, up, interpret=_interpret())
+    return _ref().swiglu(gate, up)
+
+
+@tagged(OpGroup.FUSED, "fused_geglu")
+def _fused_geglu(gate, up):
+    if _BACKEND != "jnp":
+        return _kernels().geglu(gate, up, interpret=_interpret())
+    return jax.nn.gelu(gate.astype(jnp.float32),
+                       approximate=True).astype(gate.dtype) * up
+
+
+@tagged(OpGroup.FUSED, "fused_rope")
+def _fused_rope(x, positions, base: float = 10000.0, fraction: float = 1.0):
+    if _BACKEND != "jnp":
+        return _kernels().fused_rope(x, positions, base=base,
+                                     fraction=fraction,
+                                     interpret=_interpret())
+    return _ref().rope(x, positions, base=base, fraction=fraction)
+
+
+@tagged(OpGroup.FUSED, "fused_qdq")
+def _fused_qdq(x):
+    q, s = _quantize_int8_impl(x)
+    return _dequantize_int8_impl(q, s, x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -357,7 +540,7 @@ def nms(boxes, scores, iou_threshold: float = 0.5,
     if _BACKEND != "jnp":
         return _kernels().nms(boxes, scores, iou_threshold=iou_threshold,
                               score_threshold=score_threshold,
-                              interpret=_BACKEND == "pallas_interpret")
+                              interpret=_interpret())
     n = boxes.shape[0]
     order = jnp.argsort(-scores)
     b = boxes[order]

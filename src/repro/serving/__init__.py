@@ -40,16 +40,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sharding
+from repro import nn, sharding
 from repro.models import init_lm_cache, lm_decode, lm_prefill
 from repro.models.common import ModelConfig
 from repro.runtime import cast_params
 
 
-def make_prefill_step(cfg: ModelConfig, max_len: int, mesh=None) -> Callable:
-    """prefill_step(params, tokens, lengths=None) -> (last_logits, caches)."""
+def make_prefill_step(cfg: ModelConfig, max_len: int, mesh=None,
+                      fused: bool = False) -> Callable:
+    """prefill_step(params, tokens, lengths=None) -> (last_logits, caches).
+
+    ``fused=True`` traces the model under ``nn.fuse()``: the fusable
+    NonGEMM chains (residual-add→norm, SwiGLU, rope) run as single
+    Pallas-kernel-backed fused operators (repro.core.fusion).
+    """
     def prefill_step(params, tokens, lengths=None):
-        with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard):
+        with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard), \
+                nn.fuse(fused):
             working = cast_params(params, cfg.activation_dtype)
             return lm_prefill(working, tokens, cfg, max_len=max_len,
                               lengths=lengths)
@@ -57,13 +64,17 @@ def make_prefill_step(cfg: ModelConfig, max_len: int, mesh=None) -> Callable:
 
 
 def make_serve_step(cfg: ModelConfig, mesh=None,
-                    greedy: bool = True, temperature: float = 1.0) -> Callable:
+                    greedy: bool = True, temperature: float = 1.0,
+                    fused: bool = False) -> Callable:
     """serve_step(params, token, pos, caches, key) -> (token', caches').
 
     ``pos`` is a scalar (lockstep batch) or a per-slot ``(B,)`` vector.
+    ``fused=True`` routes ``lm_decode`` through the fused fast path
+    (fused add+norm and SwiGLU — see repro.core.fusion).
     """
     def serve_step(params, token, pos, caches, key):
-        with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard):
+        with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard), \
+                nn.fuse(fused):
             working = cast_params(params, cfg.activation_dtype)
             logits, caches = lm_decode(working, token, pos, caches, cfg)
             lf = logits.astype(jnp.float32)
@@ -180,12 +191,19 @@ def _slot_insert(shared: dict, one: dict, slot) -> dict:
 
 
 class Engine:
-    """Continuous-batching serving engine over one shared static KV cache."""
+    """Continuous-batching serving engine over one shared static KV cache.
+
+    ``fused=True`` compiles both engine programs (prefill + decode) through
+    the operator-fusion fast path: residual-add→norm pairs and SwiGLU run
+    as single fused Pallas-kernel-backed ops (``repro.core.fusion``),
+    numerically equivalent to the unfused programs.
+    """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
                  mesh=None, greedy: bool = True, pad_id: int = 0,
                  seed: int = 0, min_prefill_bucket: int = 8,
+                 fused: bool = False,
                  clock: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.params = params
@@ -194,15 +212,18 @@ class Engine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.greedy = greedy
+        self.fused = fused
         self.min_prefill_bucket = min_prefill_bucket
         self.key = jax.random.PRNGKey(seed)
         self.queue: List[Request] = []
         self.stats = EngineStats()
         self.clock = clock
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len, mesh))
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len, mesh,
+                                                  fused=fused))
         # donate the cache through decode (same as the dry-run's lowering):
         # the step updates B rows in place instead of copying the cache
-        self._decode = jax.jit(make_serve_step(cfg, mesh, greedy=greedy),
+        self._decode = jax.jit(make_serve_step(cfg, mesh, greedy=greedy,
+                                               fused=fused),
                                donate_argnums=(3,))
         # donate the shared cache: the splice updates one row in place
         # instead of copying every (max_batch, max_len, ...) leaf per admit

@@ -67,6 +67,64 @@ def test_fused_add_rms_norm(dt, rng):
                                np.asarray(wr, np.float32), atol=_tol(dt))
 
 
+@pytest.mark.parametrize("dt", DTYPES)
+def test_fused_add_layer_norm(dt, rng):
+    x = _rand(rng, (3, 17, 128), dt)
+    r = _rand(jax.random.PRNGKey(1), (3, 17, 128), dt)
+    w = _rand(jax.random.PRNGKey(2), (128,), dt)
+    b = _rand(jax.random.PRNGKey(3), (128,), dt)
+    gy, gr = ops.fused_add_layer_norm(x, r, w, b, interpret=True)
+    wy, wr = ref.fused_add_layer_norm(x, r, w, b)
+    np.testing.assert_allclose(np.asarray(gy, np.float32),
+                               np.asarray(wy, np.float32), atol=_tol(dt))
+    np.testing.assert_allclose(np.asarray(gr, np.float32),
+                               np.asarray(wr, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 33, 257), (1, 7, 3, 64)])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_dequant_add_rms_norm_sweep(shape, dt, rng):
+    q = jax.random.randint(rng, shape, -127, 128, jnp.int8)
+    qs = jnp.float32(0.031)
+    res = _rand(jax.random.PRNGKey(1), shape, dt)
+    w = _rand(jax.random.PRNGKey(2), (shape[-1],), dt)
+    gy, gr = ops.dequant_add_rms_norm(q, qs, res, w, interpret=True)
+    wy, wr = ref.dequant_add_rms_norm(q, qs, res, w)
+    np.testing.assert_allclose(np.asarray(gy, np.float32),
+                               np.asarray(wy, np.float32), atol=_tol(dt))
+    np.testing.assert_allclose(np.asarray(gr, np.float32),
+                               np.asarray(wr, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("fraction", [1.0, 0.5, 0.25])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_fused_rope_sweep(fraction, dt, rng):
+    x = _rand(rng, (2, 9, 4, 64), dt)
+    pos = jnp.broadcast_to(jnp.arange(9)[None, :], (2, 9))
+    got = ops.fused_rope(x, pos, fraction=fraction, interpret=True)
+    want = ref.rope(x, pos, fraction=fraction)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=_tol(dt))
+
+
+def test_fused_rope_decode_positions(rng):
+    # per-slot decode: x (B, 1, H, D), positions (B, 1) at distinct depths
+    x = _rand(rng, (4, 1, 4, 64), jnp.float32)
+    pos = jnp.asarray([[3], [17], [0], [9]], jnp.int32)
+    got = ops.fused_rope(x, pos, interpret=True)
+    want = ref.rope(x, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_fused_rope_matches_nn_apply_rope(rng):
+    from repro import nn
+    x = _rand(rng, (1, 16, 8, 64), jnp.float32)
+    pos = jnp.arange(16)[None, :]
+    got = ops.fused_rope(x, pos, fraction=0.25, interpret=True)
+    want = nn.apply_rope(x, pos, fraction=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
 @pytest.mark.parametrize("shape", [(2, 60, 130), (1, 512), (3, 3, 3, 257)])
 @pytest.mark.parametrize("dt", DTYPES)
 def test_swiglu_sweep(shape, dt, rng):
