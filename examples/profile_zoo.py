@@ -12,13 +12,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.report import breakdown_table, shift_summary
 
-from repro.bench.cases import CASES, workload_for_case
+from repro.bench.cases import CASES, VISION_CASES, workload_for_case
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="all 12 cases (default: first 6)")
+    ap.add_argument("--vision", action="store_true",
+                    help="also profile the vision family (ViT classifier "
+                         "+ detector: RoI/Interpolation/Pooling groups)")
     args = ap.parse_args()
     cases = CASES if args.full else CASES[:6]
 
@@ -31,6 +34,13 @@ def main() -> None:
     print()
     print(breakdown_table(eager + acc))
     print(shift_summary(eager, acc))
+
+    if args.vision:
+        from repro.core.report import render_vision_rows
+        from repro.bench.sections import vision_rows
+
+        print("profiling the vision family ...", flush=True)
+        print(render_vision_rows(vision_rows(VISION_CASES)))
 
 
 if __name__ == "__main__":

@@ -48,8 +48,8 @@ def _cmd_list(args) -> int:
     """Print every bench/serving case with tiers + resolved Workload spec."""
     from repro.core import Workload, list_backends
 
-    from .cases import (CASES, SERVING_CASES, serving_config,
-                        workload_for_case)
+    from .cases import (CASES, SERVING_CASES, VISION_CASES, serving_config,
+                        vision_case_workload, workload_for_case)
 
     def entries(kind, cases):
         out = []
@@ -62,13 +62,17 @@ def _cmd_list(args) -> int:
                              batch=c.batch, seq=c.seq,
                              dtype=serving_config(c.arch).dtype).describe()
                 d["builder"] = "serving-engine (build_serving)"
+            elif kind == "vision":
+                d = vision_case_workload(c.arch, c.batch,
+                                         alias=c.alias).describe()
             else:
                 d = workload_for_case(c).describe()
             d.update(kind=kind, tiers=list(c.tiers))
             out.append(d)
         return out
 
-    rows = entries("zoo", CASES) + entries("serving", SERVING_CASES)
+    rows = entries("zoo", CASES) + entries("serving", SERVING_CASES) \
+        + entries("vision", VISION_CASES)
     if args.json:
         print(json.dumps({"cases": rows, "backends": list_backends()},
                          indent=1))

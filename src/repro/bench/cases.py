@@ -39,6 +39,17 @@ SERVING_CASES: List[BenchCase] = [
     BenchCase("serve stablelm b-4", "stablelm-3b", 4, 64, _Q),
 ]
 
+#: vision cases (paper's Torchvision half): seq is the encoder token
+#: count, derived from the config's patch grid so the case can never
+#: drift from what vision_case_workload actually builds (the detector's
+#: neck upsamples to det_upsample^2 x that many candidates)
+VISION_CASES: List[BenchCase] = [
+    BenchCase("vit-b16 cls b-1", "vit-b16-cls", 1,
+              get_config("vit-b16-cls").patch_grid ** 2, _Q),
+    BenchCase("detector-vit-s b-1", "detector-vit-s", 1,
+              get_config("detector-vit-s").patch_grid ** 2, _Q),
+]
+
 #: the zoo — quick tier is the CI subset, full is the paper zoo
 CASES: List[BenchCase] = [
     BenchCase("gpt2-xl b-1", "gpt2-xl", 1, 16, _Q),
@@ -129,10 +140,54 @@ def build_serving(arch: str):
     return cfg, params
 
 
+def vision_bench_config(arch: str):
+    """Full-width vision config at one block-pattern depth repeat (shares
+    are depth-invariant for the homogeneous encoder stack, like
+    :func:`bench_config`) — full image resolution, real head widths."""
+    cfg = get_config(arch)
+    return cfg.replace(n_layers=max(len(cfg.block_pattern), 2),
+                       scan_layers=False, remat=False,
+                       dtype="float32", param_dtype="float32",
+                       attn_chunk_q=512, attn_chunk_kv=512)
+
+
+@functools.lru_cache(maxsize=None)
+def build_vision(arch: str, batch: int):
+    """Returns (fwd(params, images), params, images) for a vision case."""
+    from repro.models import init_vision, vision_forward
+
+    cfg = vision_bench_config(arch)
+    params = init_vision(jax.random.PRNGKey(0), cfg)
+    images = jax.random.normal(
+        jax.random.PRNGKey(1),
+        (batch, cfg.n_channels, cfg.image_size, cfg.image_size), jnp.float32)
+
+    def fwd(params, images):
+        return vision_forward(params, images, cfg)
+
+    return fwd, params, images
+
+
 def _bench_builder(w: Workload):
     """Workload builder over the memoized full-width bench :func:`build`."""
     fwd, params, inputs = build(w.arch, w.batch, w.seq)
     return fwd, (inputs,), params
+
+
+def _vision_bench_builder(w: Workload):
+    """Workload builder over the memoized :func:`build_vision`."""
+    fwd, params, images = build_vision(w.arch, w.batch)
+    return fwd, (images,), params
+
+
+def vision_case_workload(arch: str, batch: int,
+                         alias: Optional[str] = None) -> Workload:
+    """The vision bench regime as a :class:`Workload` (full-width encoder,
+    one depth repeat, f32, full-resolution images)."""
+    cfg = get_config(arch)
+    return Workload(name=alias or f"{arch} b-{batch}", arch=arch,
+                    phase="prefill", batch=batch, seq=cfg.patch_grid ** 2,
+                    dtype="float32", builder=_vision_bench_builder)
 
 
 def case_workload(arch: str, batch: int, seq: int,
@@ -218,6 +273,24 @@ def profile_case_fused(alias: str, arch: str, batch: int, seq: int
     return fp32, fused, int8, int8_fused
 
 
+@functools.lru_cache(maxsize=None)
+def profile_case_vision(alias: str, arch: str, batch: int
+                        ) -> Tuple[ModelProfile, ModelProfile]:
+    """(fp32, fused) modeled eager-A100 pair for a vision case.
+
+    Deterministic like the quantized/fusion sections: the fp32 side is the
+    paper's accelerated-eager Torchvision setting (RoI / Interpolation /
+    pooling each their own launch train); the fused side routes the same
+    capture through :class:`~repro.core.fusion.FusionTransform`, whose
+    vision patterns (interpolate->add, box-decode and interpolate
+    collapses, the ViT add->layer-norm pairs) model the §6 remedy.
+    """
+    w = vision_case_workload(arch, batch, alias=alias)
+    fp32 = w.profile("eager-modeled:a100")
+    fused = w.with_transform(FusionTransform()).profile("eager-modeled:a100")
+    return fp32, fused
+
+
 def clear_caches() -> None:
     """Drop memoized params/profiles (can hold GBs); the runner calls
     this after each bench run, and tests/REPLs may call it directly."""
@@ -225,6 +298,8 @@ def clear_caches() -> None:
     profile_case_compiled.cache_clear()
     profile_case_quantized.cache_clear()
     profile_case_fused.cache_clear()
+    profile_case_vision.cache_clear()
     _profile_case_modeled.cache_clear()
     build.cache_clear()
     build_serving.cache_clear()
+    build_vision.cache_clear()

@@ -23,7 +23,7 @@ What is gated, and how:
                        so they are only checked when ``--time-tolerance``
                        is given (relative, e.g. 3.0 = up to 4x slower).
 
-Two paper invariants are re-checked on the *candidate* artifact itself
+Three paper invariants are re-checked on the *candidate* artifact itself
 (not just diffed against the baseline):
 
   * quantized §4.4  — per (case, mode), the int8-QDQ NonGEMM share must
@@ -33,7 +33,11 @@ Two paper invariants are re-checked on the *candidate* artifact itself
                       share than its unfused twin, and at least one case
                       must keep a NonGEMM share >= 0.15 after fusion
                       (fusion reduces but does not eliminate the
-                      bottleneck).
+                      bottleneck);
+  * vision          — the detection case must report nonzero RoI and
+                      Interpolation shares, pooling must land in the
+                      Reduction group (not OTHER), and the fused vision
+                      variant must beat fp32 on total modeled latency.
 
 Rows present only in the *new* artifact are additions, never regressions.
 Exit codes: 0 clean, 1 regressions found, 2 bad input.
@@ -48,7 +52,7 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 from .schema import (SHARE_SECTIONS, BenchResult, SchemaError,
-                     check_fusion_invariant)
+                     check_fusion_invariant, check_vision_invariant)
 
 SHARE_KEYS = ("gemm_frac", "nongemm_frac")
 
@@ -79,6 +83,7 @@ ROW_KEYS = {
     "serving": ("case", "phase"),
     "quantized": ("case", "mode", "variant"),
     "fusion": ("case", "mode", "variant"),
+    "vision": ("case", "mode", "variant"),
 }
 
 
@@ -105,6 +110,14 @@ def _check_fusion_direction(sec, findings: List["Finding"]) -> None:
     """Paper §6 invariant on the *new* artifact — the same
     ``check_fusion_invariant`` the fusion section gates itself with."""
     for where, message in check_fusion_invariant(sec.rows):
+        findings.append(Finding("regression", where, message))
+
+
+def _check_vision_direction(sec, findings: List["Finding"]) -> None:
+    """Vision invariant on the *new* artifact (detection RoI+Interpolation
+    shares nonzero, pooling in Reduction, fused below fp32) — the same
+    ``check_vision_invariant`` the vision section gates itself with."""
+    for where, message in check_vision_invariant(sec.rows):
         findings.append(Finding("regression", where, message))
 
 
@@ -266,6 +279,9 @@ def compare_artifacts(old: BenchResult, new: BenchResult,
     fu = new.section("fusion")
     if fu is not None and fu.status == "ok":
         _check_fusion_direction(fu, findings)
+    vi = new.section("vision")
+    if vi is not None and vi.status == "ok":
+        _check_vision_direction(vi, findings)
     return findings
 
 
@@ -308,6 +324,26 @@ def render_summary_markdown(old: BenchResult, new: BenchResult,
                 f"| {100*float(r.get('gemm_frac', 0.0)):.1f} "
                 f"| {100*float(r.get('nongemm_frac', 0.0)):.1f} "
                 f"| {100*float(r.get('fused_frac', 0.0)):.1f} |")
+    vi = new.section("vision")
+    if vi is not None and vi.status == "ok" and vi.rows:
+        lines += [
+            "",
+            "### vision (RoI / Interpolation / Pooling shares, candidate)",
+            "",
+            "| case | kind | variant | total | GEMM% | NonGEMM% "
+            "| RoI% | Interp% | Reduce% |",
+            "|---|---|---|---:|---:|---:|---:|---:|---:|",
+        ]
+        for r in vi.rows:
+            gf = r.get("group_fracs") or {}
+            lines.append(
+                f"| {r.get('case')} | {r.get('kind')} | {r.get('variant')} "
+                f"| {float(r.get('total_s', 0.0))*1e3:.3f}ms "
+                f"| {100*float(r.get('gemm_frac', 0.0)):.1f} "
+                f"| {100*float(r.get('nongemm_frac', 0.0)):.1f} "
+                f"| {100*float(r.get('roi_frac', 0.0)):.1f} "
+                f"| {100*float(r.get('interp_frac', 0.0)):.1f} "
+                f"| {100*float(gf.get('reduction', 0.0)):.1f} |")
     return "\n".join(lines) + "\n"
 
 

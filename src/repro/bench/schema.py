@@ -41,7 +41,7 @@ KNOWN_TIERS = ("quick", "full")
 #: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
 #: present; the serving section's "engine" rows carry throughput instead)
 SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving",
-                  "quantized", "fusion")
+                  "quantized", "fusion", "vision")
 
 #: fusion section (paper §6): unfused variant -> its fused twin, per
 #: (case, mode). Both the section's own gate (repro.bench.sections) and
@@ -103,6 +103,64 @@ def check_fusion_invariant(rows: Sequence[dict]) -> List[tuple]:
             f"residual bottleneck is not reproduced")))
     return violations
 
+
+def check_vision_invariant(rows: Sequence[dict]) -> List[tuple]:
+    """The vision-family invariant over vision-section rows.
+
+    Single implementation shared by the section's own gate
+    (``repro.bench.sections.vision_rows`` raises on any violation) and the
+    compare CLI (regression Findings on the candidate artifact). Checks:
+
+    * at least one detection-kind row exists (the Torchvision detection
+      half must actually run);
+    * every detection ``fp32`` row has strictly positive RoI *and*
+      Interpolation shares — the paper's headline detection bottleneck;
+    * every ``fp32`` row has a strictly positive Reduction share — the
+      pooling primitives must classify as Reduction, not fall into OTHER;
+    * per (case, mode), the ``fused`` variant's total modeled latency is
+      strictly below ``fp32``'s (the §6 story covers vision too).
+    """
+    violations: List[tuple] = []
+    pairs: Dict[tuple, Dict[str, dict]] = {}
+    n_detection = 0
+    for row in rows:
+        where = f"vision[{row.get('case')}, {row.get('mode')}]"
+        variant = str(row.get("variant"))
+        if row.get("kind") == "detection":
+            n_detection += 1
+        if variant == "fp32":
+            if row.get("kind") == "detection":
+                for key, label in (("roi_frac", "RoI"),
+                                   ("interp_frac", "Interpolation")):
+                    v = row.get(key)
+                    if not (_is_num(v) and float(v) > 0.0):
+                        violations.append((where, (
+                            f"detection {label} share is {v!r} — must be "
+                            f"nonzero (the paper's detection NonGEMM "
+                            f"bottleneck)")))
+            red = (row.get("group_fracs") or {}).get("reduction")
+            if not (_is_num(red) and float(red) > 0.0):
+                violations.append((where, (
+                    f"reduction share is {red!r} — pooling ops must "
+                    f"classify as Reduction, not OTHER")))
+        pairs.setdefault((str(row.get("case")), str(row.get("mode"))),
+                         {})[variant] = row
+    if rows and not n_detection:
+        violations.append(("section vision",
+                           "no detection-kind row — the Torchvision "
+                           "detection half is not exercised"))
+    for (case, mode), by_variant in sorted(pairs.items()):
+        u, f = by_variant.get("fp32"), by_variant.get("fused")
+        if u is None or f is None:
+            continue
+        ut, ft = u.get("total_s"), f.get("total_s")
+        if _is_num(ut) and _is_num(ft) and not float(ft) < float(ut):
+            violations.append((f"vision[{case}, {mode}]", (
+                f"fused total modeled latency {ft:.4g}s is not below "
+                f"fp32's {ut:.4g}s — fusion must reduce total latency "
+                f"(paper §6)")))
+    return violations
+
 #: row keys required per known section (subset check; rows may carry more)
 SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
     "breakdown": ("case", "mode", "total_s", "gemm_frac", "nongemm_frac",
@@ -120,6 +178,8 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
                   "group_fracs", "qdq_frac"),
     "fusion": ("case", "mode", "variant", "total_s", "gemm_frac",
                "nongemm_frac", "group_fracs", "fused_frac"),
+    "vision": ("case", "mode", "variant", "kind", "total_s", "gemm_frac",
+               "nongemm_frac", "group_fracs", "roi_frac", "interp_frac"),
 }
 
 

@@ -16,11 +16,12 @@ from typing import List, Sequence
 from repro.core.microbench import TABLE2_SHAPES, run_micro
 from repro.core.report import profile_row
 
-from .cases import (SERVING_CASES, build, build_serving, profile_case,
-                    profile_case_compiled, profile_case_fused,
-                    profile_case_quantized, tier_cases)
+from .cases import (SERVING_CASES, VISION_CASES, build, build_serving,
+                    profile_case, profile_case_compiled, profile_case_fused,
+                    profile_case_quantized, profile_case_vision, tier_cases)
 from .runner import BenchContext, SkipSection, register_section
-from .schema import BenchCase, check_fusion_invariant
+from .schema import (BenchCase, check_fusion_invariant,
+                     check_vision_invariant)
 
 
 def _results_root() -> str:
@@ -180,6 +181,50 @@ def fusion_rows(cases: Sequence[BenchCase]) -> List[dict]:
     timeout_s=240.0)
 def section_fusion(ctx: BenchContext) -> List[dict]:
     return fusion_rows(ctx.cases)
+
+
+# ---------------------------------------------------------------------------
+# §Vision — ViT classification + detection (RoI / Interpolation / Pooling)
+# ---------------------------------------------------------------------------
+
+def vision_rows(cases: Sequence[BenchCase]) -> List[dict]:
+    """Two rows per vision case (variant fp32 / fused), deterministic
+    modeled eager-A100 shares, with the RoI and Interpolation shares
+    broken out per row. Structurally asserts — via the same
+    ``check_vision_invariant`` the compare CLI re-runs on candidates —
+    that the detection case reports nonzero RoI *and* Interpolation
+    shares, that pooling work lands in the Reduction group, and that the
+    fused variant strictly lowers total modeled latency."""
+    from repro.configs import get_config
+
+    rows: List[dict] = []
+    for c in cases:
+        fp32, fused = profile_case_vision(c.alias, c.arch, c.batch)
+        kind = ("detection" if get_config(c.arch).is_detector
+                else "classification")
+        for variant, p in (("fp32", fp32), ("fused", fused)):
+            row = profile_row(p)
+            row["variant"] = variant
+            row["kind"] = kind
+            row["roi_frac"] = row["group_fracs"].get("roi", 0.0)
+            row["interp_frac"] = row["group_fracs"].get("interpolation", 0.0)
+            rows.append(row)
+    violations = check_vision_invariant(rows)
+    if violations:
+        raise AssertionError("; ".join(f"{w}: {m}" for w, m in violations))
+    return rows
+
+
+@register_section(
+    "vision",
+    title="§Vision — ViT classification + detection: RoI / Interpolation / "
+          "Pooling NonGEMM groups (fp32 vs fused, modeled eager A100)",
+    timeout_s=300.0)
+def section_vision(ctx: BenchContext) -> List[dict]:
+    cases = tier_cases(ctx.tier, VISION_CASES)
+    if not cases:
+        raise SkipSection(f"no vision cases in tier {ctx.tier!r}")
+    return vision_rows(cases)
 
 
 # ---------------------------------------------------------------------------

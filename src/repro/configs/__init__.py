@@ -28,6 +28,10 @@ ARCH_IDS = [
 
 PAPER_IDS = ["gpt2-xl", "llama2-7b", "bert-base", "vit-b16"]
 
+#: the vision workload family (paper's Torchvision half): real patchify
+#: ViT classification + single-stage detection (models/vision.py)
+VISION_IDS = ["vit-b16-cls", "detector-vit-s"]
+
 _MODULE_FOR = {
     "musicgen-large": "musicgen_large",
     "stablelm-3b": "stablelm_3b",
@@ -43,6 +47,8 @@ _MODULE_FOR = {
     "llama2-7b": "paper_zoo",
     "bert-base": "paper_zoo",
     "vit-b16": "paper_zoo",
+    "vit-b16-cls": "vit_b16",
+    "detector-vit-s": "detector_vit_s",
 }
 
 _CACHE: Dict[str, ModelConfig] = {}
@@ -54,7 +60,7 @@ def get_config(name: str) -> ModelConfig:
         mod_name = _MODULE_FOR.get(key)
         if mod_name is None:
             raise KeyError(f"unknown architecture {name!r}; "
-                           f"known: {ARCH_IDS + PAPER_IDS}")
+                           f"known: {ARCH_IDS + PAPER_IDS + VISION_IDS}")
         mod = importlib.import_module(f"repro.configs.{mod_name}")
         if mod_name == "paper_zoo":
             _CACHE[key] = mod.CONFIGS[key]
@@ -108,9 +114,16 @@ def reduced(cfg: ModelConfig) -> ModelConfig:
     if cfg.lru_width:
         kw.update(lru_width=d_model)
     kw["window_size"] = min(cfg.window_size, 64)
+    if cfg.is_vision:
+        # a 4x4 patch grid (16 tokens) keeps the CPU smoke forward tiny
+        # while still running interpolate/pool/top-k/NMS end to end
+        kw.update(image_size=min(cfg.image_size, 4 * cfg.patch_size),
+                  n_classes=min(cfg.n_classes, 16),
+                  det_top_k=min(cfg.det_top_k, 32))
     kw["name"] = cfg.name + "-smoke"
     return cfg.replace(**kw)
 
 
-__all__ = ["ARCH_IDS", "PAPER_IDS", "get_config", "all_configs", "reduced",
-           "ModelConfig", "SHAPES", "ShapeSpec", "shape_applicable"]
+__all__ = ["ARCH_IDS", "PAPER_IDS", "VISION_IDS", "get_config",
+           "all_configs", "reduced", "ModelConfig", "SHAPES", "ShapeSpec",
+           "shape_applicable"]

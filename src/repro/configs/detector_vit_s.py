@@ -1,0 +1,39 @@
+"""ViT-S single-stage detector — the Torchvision detection/segmentation case.
+
+The paper's most dramatic NonGEMM result: on detectors, RoI selection
+(NMS), interpolation and pooling dominate latency once GEMMs are
+accelerated. This config drives the ``models/vision.py`` detection
+pipeline: ViT-S backbone (256px, 16px patches -> 16x16 grid), bilinear
+feature upsample x2 (32x32 = 1024 candidate positions), COCO-sized class
+head, CenterNet-style peak pooling, top-256 score sort, greedy NMS.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="detector-vit-s",
+    family="vision",
+    n_layers=12,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=91,              # unused by the vision path (head=n_classes)
+    block_pattern=("attn",),
+    pos_emb="none",
+    norm="layernorm",
+    ffn="gelu",
+    ffn_bias=True,
+    qkv_bias=True,
+    causal=False,
+    tie_embeddings=False,
+    input_mode="embeddings",
+    image_size=256,
+    patch_size=16,
+    n_channels=3,
+    n_classes=91,               # COCO categories
+    det_top_k=256,
+    det_upsample=2,
+    det_iou_threshold=0.5,
+    det_score_threshold=0.05,
+)

@@ -4,6 +4,12 @@ end): GPT2-XL, Llama2-7B, BERT-base and ViT-B/16.
 These drive the paper-validation benchmarks (Fig 1/8/10/12, Table 5 LM
 rows): the assigned zoo is LM-family, so the paper's LLM results are the
 directly reproduced subset; BERT/ViT cover the encoder side of Fig 5/9.
+
+The ``vit-b16`` entry below is the *embeddings-stub* frontend (LM stack on
+precomputed patch embeddings). The real vision family — conv patchify,
+interpolatable 2D positions, pooled heads, detection with NMS — lives in
+``vit_b16.py`` / ``detector_vit_s.py`` (``VISION_IDS``), driving
+``models/vision.py`` and the ``vision`` bench section.
 """
 
 from repro.models.common import ModelConfig

@@ -1,0 +1,37 @@
+"""ViT-B/16 image classifier — the real patchify-ViT vision workload.
+
+The paper's Torchvision classification case (NonGEMM Bench Table 1): 224px
+images, 16px patches (196 tokens), 12 encoder layers, ImageNet-1k head.
+Unlike the ``vit-b16`` stub in ``paper_zoo.py`` (which feeds precomputed
+embeddings to the LM stack), this config drives ``models/vision.py``
+end to end: conv patch embed, interpolatable 2D position embeddings, and
+a pooled classification head — so the Interpolation and Reduction(pooling)
+operator groups are exercised for real.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="vit-b16-cls",
+    family="vision",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=1000,            # unused by the vision path (head=n_classes)
+    block_pattern=("attn",),
+    pos_emb="none",             # 2D learned grid lives in the vision params
+    norm="layernorm",
+    ffn="gelu",
+    ffn_bias=True,
+    qkv_bias=True,
+    causal=False,               # encoder-only
+    tie_embeddings=False,
+    input_mode="embeddings",
+    image_size=224,
+    patch_size=16,
+    n_channels=3,
+    n_classes=1000,
+    pool="avg",
+)

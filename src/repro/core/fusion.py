@@ -142,6 +142,12 @@ FUSION_PATTERNS: Tuple[FusionPattern, ...] = (
                   ((OpGroup.ACTIVATION, "silu"),
                    (OpGroup.ELEMENTWISE, "mul")),
                   kernel="swiglu"),
+    # vision neck: bilinear upsample feeding the lateral/prior add (the
+    # FPN-style merge every detector pays once per level) — one pass over
+    # the upsampled map instead of write + re-read
+    FusionPattern("fused_interpolate_add",
+                  ((OpGroup.INTERPOLATION, "interpolate_bilinear"),
+                   (OpGroup.ELEMENTWISE, "residual_add"))),
     # logit chain: softmax feeding greedy sampling
     FusionPattern("fused_softmax_sample",
                   ((OpGroup.LOGIT, "softmax"),
@@ -164,6 +170,14 @@ FUSION_PATTERNS: Tuple[FusionPattern, ...] = (
                   min_records=2),
     FusionPattern("fused_rope", ((OpGroup.MEMORY, "apply_rope"),),
                   min_records=2, kernel="fused_rope"),
+    # vision intra-site collapses: the bilinear gather/lerp train and the
+    # detection head's box-decode elementwise train, one launch each
+    FusionPattern("fused_interpolate",
+                  ((OpGroup.INTERPOLATION, "interpolate_bilinear"),),
+                  min_records=2),
+    FusionPattern("fused_box_decode",
+                  ((OpGroup.ELEMENTWISE, "box_decode"),),
+                  min_records=2),
 )
 
 

@@ -279,6 +279,45 @@ def render_fusion_rows(rows: Iterable[dict]) -> str:
     return buf.getvalue()
 
 
+def render_vision_rows(rows: Iterable[dict]) -> str:
+    """Vision section: fp32 vs fused shares with the RoI / Interpolation /
+    Reduction(pooling) groups broken out per case."""
+    buf = io.StringIO()
+    buf.write(f"{'model':<24} {'kind':<15} {'variant':<8} {'total':>12} "
+              f"{'GEMM%':>7} {'NonGEMM%':>9} {'RoI%':>7} {'Interp%':>8} "
+              f"{'Reduce%':>8}\n")
+    rows = list(rows)
+    for r in rows:
+        gf = r.get("group_fracs") or {}
+        buf.write(f"{r['case']:<24} {r.get('kind', '?'):<15} "
+                  f"{r['variant']:<8} {r['total_s']*1e3:>10.3f}ms "
+                  f"{_fmt_pct(r['gemm_frac']):>7} "
+                  f"{_fmt_pct(r['nongemm_frac']):>9} "
+                  f"{_fmt_pct(r.get('roi_frac', 0.0)):>7} "
+                  f"{_fmt_pct(r.get('interp_frac', 0.0)):>8} "
+                  f"{_fmt_pct(gf.get('reduction', 0.0)):>8}\n")
+    det = [r for r in rows
+           if r.get("kind") == "detection" and r.get("variant") == "fp32"]
+    if det:
+        share = max(r.get("roi_frac", 0.0) + r.get("interp_frac", 0.0)
+                    for r in det)
+        buf.write(f"\ndetection RoI+Interpolation share {100*share:.1f}% "
+                  f"(paper: RoI selection/interpolation/pooling dominate "
+                  f"accelerated detection)\n")
+    if rows:
+        # lazy import for the same reason as the fusion renderer: the
+        # verdict is THE shared gate (section + compare), never a reprint
+        from repro.bench.schema import check_vision_invariant
+        violations = check_vision_invariant(rows)
+        if violations:
+            for where, message in violations:
+                buf.write(f"invariant VIOLATED — {where}: {message}\n")
+        else:
+            buf.write("vision invariant REPRODUCED (detection RoI/Interp "
+                      "nonzero, pooling in Reduction, fused < fp32)\n")
+    return buf.getvalue()
+
+
 def render_timing_table(sections: Iterable) -> str:
     """Per-section wall-clock summary of a bench run.
 
@@ -334,6 +373,7 @@ SECTION_RENDERERS = {
     "serving": render_serving_rows,
     "quantized": render_quantized_rows,
     "fusion": render_fusion_rows,
+    "vision": render_vision_rows,
 }
 
 

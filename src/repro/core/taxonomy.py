@@ -161,6 +161,11 @@ _reg(
     "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
     "reduce_or", "argmax", "argmin", "reduce_precision", "cumsum", "cumprod",
     "cummax", "cummin", "cumlogsumexp", "top_k", "sort",
+    # pooling / windowed reductions (max_pool, avg_pool, and the max-pool
+    # gradient's scatter) — a reduction over a sliding window is still a
+    # reduction, per the module doc
+    "reduce_window", "reduce_window_sum", "reduce_window_max",
+    "reduce_window_min", "select_and_scatter_add",
 )
 _reg(
     OpGroup.COLLECTIVE,
@@ -244,6 +249,7 @@ _HLO_OPCODE_GROUPS: dict[str, OpGroup] = {
     "iota": OpGroup.MEMORY,
     "reduce": OpGroup.REDUCTION,
     "reduce-window": OpGroup.REDUCTION,
+    "select-and-scatter": OpGroup.REDUCTION,  # max-pool gradient
     "sort": OpGroup.REDUCTION,
     "add": OpGroup.ELEMENTWISE,
     "subtract": OpGroup.ELEMENTWISE,

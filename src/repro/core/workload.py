@@ -130,8 +130,26 @@ def default_builder(w: "Workload"):
 
     cfg = reduced(get_config(w.arch)).replace(dtype=w.dtype,
                                               param_dtype=w.dtype)
-    params = init_lm(jax.random.PRNGKey(0), cfg)
     key = jax.random.PRNGKey(1)
+
+    if cfg.is_vision:
+        # vision family: encoder over conv patches; batch counts, the
+        # (seq) field is informational (token count is the patch grid)
+        from repro.models import init_vision, vision_forward
+
+        if w.phase != "prefill":
+            raise ValueError(f"vision workloads are encoder-only "
+                             f"(phase='prefill'), got {w.phase!r}")
+        params = init_vision(jax.random.PRNGKey(0), cfg)
+        images = jax.random.normal(
+            key, (w.batch, cfg.n_channels, cfg.image_size, cfg.image_size),
+            jnp.float32)
+
+        def vfn(params, images):
+            return vision_forward(params, images, cfg)
+        return vfn, (images,), params
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
     if cfg.input_mode == "tokens":
         inputs = jax.random.randint(key, (w.batch, w.seq), 0, cfg.vocab_size)
     else:

@@ -109,6 +109,27 @@ def softmax_xent(logits, labels):
     return lse - picked
 
 
+def interpolate_bilinear(x, out_hw):
+    """Bilinear NCHW resize, align_corners=False — the naive four-corner
+    form (each corner gathered independently), f32 math, ``x.dtype`` out.
+    Oracle for ``repro.nn.interpolate_bilinear``'s hoisted-gather version."""
+    n, c, h, w = x.shape
+    oh, ow = out_hw
+    ys = (jnp.arange(oh) + 0.5) * (h / oh) - 0.5
+    xs = (jnp.arange(ow) + 0.5) * (w / ow) - 0.5
+    y0 = jnp.clip(jnp.floor(ys), 0, h - 1)
+    x0 = jnp.clip(jnp.floor(xs), 0, w - 1)
+    y1 = jnp.clip(y0 + 1, 0, h - 1)
+    x1 = jnp.clip(x0 + 1, 0, w - 1)
+    wy = jnp.clip(ys - y0, 0.0, 1.0)[:, None]
+    wx = jnp.clip(xs - x0, 0.0, 1.0)
+    y0, y1, x0, x1 = (a.astype(jnp.int32) for a in (y0, y1, x0, x1))
+    xf = x.astype(jnp.float32)
+    top = xf[:, :, y0][:, :, :, x0] * (1 - wx) + xf[:, :, y0][:, :, :, x1] * wx
+    bot = xf[:, :, y1][:, :, :, x0] * (1 - wx) + xf[:, :, y1][:, :, :, x1] * wx
+    return (top * (1 - wy) + bot * wy).astype(x.dtype)
+
+
 def nms(boxes, scores, iou_threshold: float = 0.5,
         score_threshold: float = 0.0):
     """Greedy NMS keep-mask, torchvision semantics. boxes (N,4) xyxy."""

@@ -1,13 +1,17 @@
-"""Model zoo: one decoder stack, many mixer flavors (see transformer.py)."""
+"""Model zoo: one decoder stack, many mixer flavors (see transformer.py),
+plus the vision family (ViT classifier / detector — see vision.py)."""
 
 from repro.models.common import (ModelConfig, SHAPES, ShapeSpec,
                                  LONG_CONTEXT_ARCHS, shape_applicable,
                                  count_params)
 from repro.models.transformer import (init_lm, lm_forward, lm_loss,
                                       init_lm_cache, lm_prefill, lm_decode)
+from repro.models.vision import (init_vision, vision_forward, vit_classify,
+                                 detect_forward)
 
 __all__ = [
     "ModelConfig", "SHAPES", "ShapeSpec", "LONG_CONTEXT_ARCHS",
     "shape_applicable", "count_params", "init_lm", "lm_forward", "lm_loss",
     "init_lm_cache", "lm_prefill", "lm_decode",
+    "init_vision", "vision_forward", "vit_classify", "detect_forward",
 ]

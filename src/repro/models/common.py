@@ -79,6 +79,21 @@ class ModelConfig:
     slstm_ff_factor: float = 4.0 / 3.0
     mlstm_chunk: int = 256
 
+    # vision (ViT classifier / single-stage detector — models/vision.py);
+    # image_size > 0 marks a vision workload (encoder over conv patches)
+    image_size: int = 0
+    patch_size: int = 16
+    n_channels: int = 3
+    n_classes: int = 0                      # classifier/detection head width
+    pool: str = "avg"                       # classifier head pool: avg|max
+
+    # detection head (det_top_k > 0 => detector): feature upsample factor,
+    # candidates kept after the score sort, and the NMS thresholds
+    det_top_k: int = 0
+    det_upsample: int = 2
+    det_iou_threshold: float = 0.5
+    det_score_threshold: float = 0.05
+
     # embeddings / head
     tie_embeddings: bool = True
     scale_embeddings: bool = False          # gemma: x *= sqrt(d_model)
@@ -127,6 +142,19 @@ class ModelConfig:
     @property
     def is_moe(self) -> bool:
         return self.n_experts > 0
+
+    @property
+    def is_vision(self) -> bool:
+        return self.image_size > 0
+
+    @property
+    def is_detector(self) -> bool:
+        return self.is_vision and self.det_top_k > 0
+
+    @property
+    def patch_grid(self) -> int:
+        """Patches per side (the encoder sees ``patch_grid ** 2`` tokens)."""
+        return self.image_size // self.patch_size
 
     @property
     def activation_dtype(self):

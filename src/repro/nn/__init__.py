@@ -223,6 +223,12 @@ def silu(x):
     return x * jax.nn.sigmoid(x)
 
 
+@tagged(OpGroup.ACTIVATION, "sigmoid")
+def sigmoid(x):
+    """Plain sigmoid (detection class scores)."""
+    return jax.nn.sigmoid(x.astype(jnp.float32)).astype(x.dtype)
+
+
 @tagged(OpGroup.ACTIVATION, "swiglu")
 def swiglu(gate, up):
     """SiLU(gate) * up — fused Activation + Elem-wise mul."""
@@ -344,6 +350,24 @@ def residual_add(x, y):
 @tagged(OpGroup.ELEMENTWISE, "scale")
 def scale(x, factor):
     return x * factor
+
+
+@tagged(OpGroup.ELEMENTWISE, "box_decode")
+def box_decode(raw, anchors):
+    """Anchor-relative box decode: raw (..., 4) offsets -> xyxy (..., 4).
+
+    ``anchors`` are (..., 4) as (cx, cy, w, h). The usual detection-head
+    elementwise train (shift centers, exp the log-sizes, corner convert) —
+    one op site so the fusion pass can collapse it to a single launch.
+    """
+    rf = raw.astype(jnp.float32)
+    af = anchors.astype(jnp.float32)
+    cx = af[..., 0] + rf[..., 0] * af[..., 2]
+    cy = af[..., 1] + rf[..., 1] * af[..., 3]
+    w = af[..., 2] * jnp.exp(jnp.clip(rf[..., 2], -4.0, 4.0))
+    h = af[..., 3] * jnp.exp(jnp.clip(rf[..., 3], -4.0, 4.0))
+    out = jnp.stack([cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2], axis=-1)
+    return out.astype(raw.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -523,6 +547,27 @@ def einsum(spec: str, *operands):
                       preferred_element_type=jnp.float32).astype(dt)
 
 
+@tagged(OpGroup.GEMM, "conv2d")
+def conv2d(x, w, b=None, stride: int = 1, padding: str = "VALID"):
+    """Strided 2D convolution: NCHW input x OIHW kernel -> NHWC output.
+
+    Convolutions are GEMM-group work in the paper's taxonomy (Table 2); the
+    NHWC output puts channels last so the vision models feed the result
+    straight into the token-major encoder stack. Like ``linear``/``einsum``,
+    operands round-trip through the int8 grid under the QDQ transform.
+    """
+    dt = x.dtype
+    x, w = _maybe_fake_quant(x, w)
+    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=s, padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NHWC"),
+        preferred_element_type=jnp.float32).astype(dt)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
 # ---------------------------------------------------------------------------
 # RoI selection (paper group: RoI Selection) — TPU-adapted NMS
 # ---------------------------------------------------------------------------
@@ -574,7 +619,13 @@ def nms(boxes, scores, iou_threshold: float = 0.5,
 
 @tagged(OpGroup.INTERPOLATION, "interpolate_bilinear")
 def interpolate_bilinear(x, out_hw: Tuple[int, int]):
-    """Bilinear resize of NCHW, align_corners=False (torch default)."""
+    """Bilinear resize of NCHW, align_corners=False (torch default).
+
+    The two row-gathers are hoisted (each output row pair is gathered once
+    and reused by both column corners — the naive four-corner form gathers
+    four full copies of ``x``), the lerp runs in float32, and the result is
+    cast back to ``x.dtype`` so bf16 activations stay bf16.
+    """
     n, c, h, w = x.shape
     oh, ow = out_hw
     ys = (jnp.arange(oh) + 0.5) * (h / oh) - 0.5
@@ -583,9 +634,47 @@ def interpolate_bilinear(x, out_hw: Tuple[int, int]):
     x0 = jnp.clip(jnp.floor(xs), 0, w - 1)
     y1 = jnp.clip(y0 + 1, 0, h - 1)
     x1 = jnp.clip(x0 + 1, 0, w - 1)
-    wy = jnp.clip(ys - y0, 0.0, 1.0)
-    wx = jnp.clip(xs - x0, 0.0, 1.0)
+    wy = jnp.clip(ys - y0, 0.0, 1.0)[:, None]       # (OH, 1)
+    wx = jnp.clip(xs - x0, 0.0, 1.0)                # (OW,)
     y0, y1, x0, x1 = (a.astype(jnp.int32) for a in (y0, y1, x0, x1))
-    top = x[:, :, y0][:, :, :, x0] * (1 - wx) + x[:, :, y0][:, :, :, x1] * wx
-    bot = x[:, :, y1][:, :, :, x0] * (1 - wx) + x[:, :, y1][:, :, :, x1] * wx
-    return top * (1 - wy[:, None]) + bot * wy[:, None]
+    rows0 = x[:, :, y0].astype(jnp.float32)         # (N, C, OH, W)
+    rows1 = x[:, :, y1].astype(jnp.float32)
+    top = rows0[..., x0] * (1 - wx) + rows0[..., x1] * wx
+    bot = rows1[..., x0] * (1 - wx) + rows1[..., x1] * wx
+    return (top * (1 - wy) + bot * wy).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pooling / windowed reductions (Reduction group — vision heads & necks)
+# ---------------------------------------------------------------------------
+
+def _pool_stride(window: int, stride: Optional[int]) -> int:
+    return window if stride is None else stride
+
+
+@tagged(OpGroup.REDUCTION, "max_pool2d")
+def max_pool2d(x, window: int = 2, stride: Optional[int] = None,
+               padding: str = "VALID"):
+    """2D max pool over NHWC (windowed reduction — paper group Reduction)."""
+    s = _pool_stride(window, stride)
+    init = jnp.asarray(-jnp.inf, x.dtype)
+    return jax.lax.reduce_window(x, init, jax.lax.max,
+                                 (1, window, window, 1), (1, s, s, 1),
+                                 padding)
+
+
+@tagged(OpGroup.REDUCTION, "avg_pool2d")
+def avg_pool2d(x, window: int = 2, stride: Optional[int] = None,
+               padding: str = "VALID"):
+    """2D average pool over NHWC; f32 accumulation, result in ``x.dtype``."""
+    s = _pool_stride(window, stride)
+    acc = jax.lax.reduce_window(x.astype(jnp.float32), 0.0, jax.lax.add,
+                                (1, window, window, 1), (1, s, s, 1),
+                                padding)
+    return (acc / float(window * window)).astype(x.dtype)
+
+
+@tagged(OpGroup.REDUCTION, "global_avg_pool")
+def global_avg_pool(x, axes: Tuple[int, ...] = (1, 2)):
+    """Mean over the spatial axes — the classifier-head pooling op."""
+    return jnp.mean(x.astype(jnp.float32), axis=axes).astype(x.dtype)

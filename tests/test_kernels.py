@@ -189,3 +189,76 @@ def test_nms_score_threshold(rng):
     scores = jnp.asarray([0.9, 0.01])
     keep = ops.nms(boxes, scores, score_threshold=0.5, interpret=True)
     assert bool(keep[0]) and not bool(keep[1])
+
+
+# ---------------------------------------------------------------------------
+# Pallas NMS vs nn.nms reference oracle: the RoI-selection parity sweep
+# ---------------------------------------------------------------------------
+
+def _random_boxes(rng, n):
+    ks = jax.random.split(rng, 3)
+    centers = jax.random.uniform(ks[0], (n, 2)) * 60
+    wh = jax.random.uniform(ks[1], (n, 2)) * 12 + 1
+    boxes = jnp.concatenate([centers - wh / 2, centers + wh / 2], -1)
+    return boxes, jax.random.uniform(ks[2], (n,))
+
+
+def _assert_nms_parity(boxes, scores, **kw):
+    got = ops.nms(boxes, scores, interpret=True, **kw)
+    want = ref.nms(boxes, scores, **kw)
+    assert bool(jnp.all(got == want))
+
+
+@pytest.mark.parametrize("n", [1, 100, 130, 383])
+def test_nms_parity_non_multiple_of_128(n, rng):
+    # the kernel pads lanes to a 128 multiple; parity must not depend on it
+    _assert_nms_parity(*_random_boxes(rng, n), iou_threshold=0.5)
+
+
+def test_nms_parity_zero_area_boxes(rng):
+    boxes, scores = _random_boxes(rng, 64)
+    # degenerate boxes (x2 <= x1 or y2 <= y1): IoU defined as 0 both sides
+    degen = jnp.asarray([[5.0, 5.0, 5.0, 5.0], [9.0, 9.0, 3.0, 3.0]])
+    boxes = boxes.at[:2].set(degen)
+    _assert_nms_parity(boxes, scores, iou_threshold=0.5)
+
+
+def test_nms_parity_duplicate_scores(rng):
+    boxes, _ = _random_boxes(rng, 96)
+    # heavy score ties: argsort is stable in both paths, so the greedy
+    # order — and therefore the keep mask — must agree exactly
+    scores = jnp.asarray([0.5, 0.9, 0.1] * 32)
+    _assert_nms_parity(boxes, scores, iou_threshold=0.5)
+
+
+def test_nms_parity_all_suppressed(rng):
+    # N near-identical boxes: only the top-scored survivor remains
+    base = jnp.asarray([10.0, 10.0, 20.0, 20.0])
+    jitter = jax.random.uniform(rng, (72, 4)) * 0.1
+    boxes = base[None] + jitter
+    scores = jnp.linspace(0.9, 0.1, 72)
+    _assert_nms_parity(boxes, scores, iou_threshold=0.3)
+    keep = ops.nms(boxes, scores, iou_threshold=0.3, interpret=True)
+    assert int(keep.sum()) == 1
+
+
+def test_nms_parity_none_suppressed(rng):
+    # disjoint boxes on a diagonal: everything above threshold survives
+    off = jnp.arange(40, dtype=jnp.float32) * 30
+    boxes = jnp.stack([off, off, off + 10, off + 10], axis=-1)
+    scores = jax.random.uniform(rng, (40,)) * 0.5 + 0.25
+    _assert_nms_parity(boxes, scores, iou_threshold=0.5)
+    keep = ops.nms(boxes, scores, interpret=True)
+    assert int(keep.sum()) == 40
+    # ... and a threshold > 1 can never suppress anything
+    _assert_nms_parity(*_random_boxes(rng, 64), iou_threshold=1.5)
+
+
+def test_nms_parity_under_interpret_env(rng, monkeypatch):
+    # REPRO_PALLAS_INTERPRET=1 must route the default (interpret=None)
+    # call through interpret mode off-TPU — the CI configuration
+    monkeypatch.setenv(ops.INTERPRET_ENV, "1")
+    boxes, scores = _random_boxes(rng, 200)
+    got = ops.nms(boxes, scores, iou_threshold=0.4)
+    want = ref.nms(boxes, scores, iou_threshold=0.4)
+    assert bool(jnp.all(got == want))

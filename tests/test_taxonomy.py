@@ -84,3 +84,46 @@ def test_named_scope_reaches_jaxpr():
     jaxpr = jax.make_jaxpr(f)(jnp.ones((2, 8)))
     stacks = [str(e.source_info.name_stack) for e in jaxpr.jaxpr.eqns]
     assert any("ng:normalization:rms_norm" in s for s in stacks)
+
+
+@pytest.mark.parametrize("prim", [
+    "reduce_window", "reduce_window_sum", "reduce_window_max",
+    "reduce_window_min", "select_and_scatter_add",
+])
+def test_pooling_prims_are_reduction(prim):
+    # regression: the reduce_window family was unregistered, so conv/pool
+    # models silently misreported their pooling work as OTHER
+    assert classify_primitive(prim) == OpGroup.REDUCTION
+
+
+def test_pooling_hlo_opcodes_are_reduction():
+    assert classify_hlo("reduce-window")[0] == OpGroup.REDUCTION
+    assert classify_hlo("select-and-scatter")[0] == OpGroup.REDUCTION
+
+
+def test_pool_jaxprs_classify_as_reduction():
+    """max_pool / avg_pool jaxprs (untagged lax.reduce_window) must land in
+    REDUCTION, not OTHER — the taxonomy hole the vision family exposed."""
+    def max_pool(x):
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    def avg_pool(x):
+        return jax.lax.reduce_window(x, 0.0, jax.lax.add,
+                                     (1, 2, 2, 1), (1, 2, 2, 1),
+                                     "VALID") / 4.0
+
+    x = jnp.ones((1, 8, 8, 4))
+    for fn in (max_pool, avg_pool):
+        prims = [e.primitive.name
+                 for e in jax.make_jaxpr(fn)(x).jaxpr.eqns
+                 if e.primitive.name.startswith("reduce_window")]
+        assert prims, "expected a reduce_window primitive in the jaxpr"
+        for p in prims:
+            assert classify_primitive(p) == OpGroup.REDUCTION
+
+    # the max-pool *gradient* scatters through select_and_scatter_add
+    grad_prims = [e.primitive.name for e in jax.make_jaxpr(
+        jax.grad(lambda x: max_pool(x).sum()))(x).jaxpr.eqns]
+    assert "select_and_scatter_add" in grad_prims
+    assert classify_primitive("select_and_scatter_add") == OpGroup.REDUCTION

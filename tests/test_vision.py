@@ -1,0 +1,287 @@
+"""Vision workload family: models, tagging, interpolation fix, bench gate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.configs import VISION_IDS, get_config, reduced
+from repro.core import OpGroup, Workload, capture
+from repro.core.fusion import fuse_records
+from repro.kernels import ref
+from repro.models import (detect_forward, init_vision, vision_forward,
+                          vit_classify)
+
+
+@pytest.fixture(scope="module")
+def cls_cfg():
+    return reduced(get_config("vit-b16-cls"))
+
+
+@pytest.fixture(scope="module")
+def det_cfg():
+    return reduced(get_config("detector-vit-s"))
+
+
+def _images(cfg, batch=2, key=1, size=None):
+    size = size or cfg.image_size
+    return jax.random.normal(jax.random.PRNGKey(key),
+                             (batch, cfg.n_channels, size, size),
+                             jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# model smoke + shapes
+# ---------------------------------------------------------------------------
+
+def test_vision_ids_registered():
+    for arch in VISION_IDS:
+        cfg = get_config(arch)
+        assert cfg.is_vision and cfg.n_classes > 0
+    assert get_config("detector-vit-s").is_detector
+    assert not get_config("vit-b16-cls").is_detector
+
+
+def test_classifier_forward(cls_cfg):
+    params = init_vision(jax.random.PRNGKey(0), cls_cfg)
+    logits = vit_classify(params, _images(cls_cfg), cls_cfg)
+    assert logits.shape == (2, cls_cfg.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_detector_forward(det_cfg):
+    params = init_vision(jax.random.PRNGKey(0), det_cfg)
+    boxes, scores, keep = detect_forward(params, _images(det_cfg), det_cfg)
+    k = det_cfg.det_top_k
+    assert boxes.shape == (2, k, 4)
+    assert scores.shape == (2, k)
+    assert keep.shape == (2, k) and keep.dtype == jnp.bool_
+    # scores came out of a descending top_k
+    s = np.asarray(scores)
+    assert (np.diff(s, axis=1) <= 1e-6).all()
+
+
+def test_vision_forward_dispatch(cls_cfg, det_cfg):
+    p_cls = init_vision(jax.random.PRNGKey(0), cls_cfg)
+    out = vision_forward(p_cls, _images(cls_cfg, 1), cls_cfg)
+    assert out.shape == (1, cls_cfg.n_classes)
+    p_det = init_vision(jax.random.PRNGKey(0), det_cfg)
+    out = vision_forward(p_det, _images(det_cfg, 1), det_cfg)
+    assert isinstance(out, tuple) and len(out) == 3
+
+
+def test_classifier_offgrid_image_interpolates_pos(cls_cfg):
+    """An off-train-resolution image must resize the 2D position field
+    through the tagged bilinear interpolation (the ViT trick)."""
+    params = init_vision(jax.random.PRNGKey(0), cls_cfg)
+    big = cls_cfg.image_size + 2 * cls_cfg.patch_size
+
+    def f(params, images):
+        return vit_classify(params, images, cls_cfg)
+
+    recs = capture(f, params, _images(cls_cfg, 1, size=big))
+    assert any(r.group == OpGroup.INTERPOLATION for r in recs)
+    logits = f(params, _images(cls_cfg, 1, size=big))
+    assert logits.shape == (1, cls_cfg.n_classes)
+    # ... and at the native resolution there is nothing to interpolate
+    recs = capture(f, params, _images(cls_cfg, 1))
+    assert not any(r.group == OpGroup.INTERPOLATION for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# attribution: the groups the LM zoo never exercised
+# ---------------------------------------------------------------------------
+
+def test_detector_profile_attributes_roi_interp_pooling():
+    w = Workload(name="det", arch="detector-vit-s", batch=1)
+    p = w.profile("eager-modeled:a100")
+    total = p.total_seconds
+    fr = {g: t / total for g, t in p.group_seconds.items()}
+    assert fr.get("roi", 0.0) > 0.0
+    assert fr.get("interpolation", 0.0) > 0.0
+    assert fr.get("reduction", 0.0) > 0.0
+    assert fr.get("gemm", 0.0) > 0.0
+
+
+def test_classifier_profile_pooling_is_reduction_not_other():
+    w = Workload(name="cls", arch="vit-b16-cls", batch=1)
+    p = w.profile("eager-modeled:a100")
+    fr = {g: t / p.total_seconds for g, t in p.group_seconds.items()}
+    assert fr.get("reduction", 0.0) > 0.0
+    # nothing vision-specific may fall through to OTHER (the only OTHER
+    # records in the stack are the pre-existing checkpoint_name markers)
+    sites = {s for (g, s) in p.op_seconds if g == "other"}
+    assert sites <= {"name"}
+
+
+def test_vision_workload_rejects_decode_phase():
+    with pytest.raises(ValueError, match="encoder-only"):
+        Workload(name="cls", arch="vit-b16-cls", phase="decode").build()
+
+
+# ---------------------------------------------------------------------------
+# fusion: the vision chains
+# ---------------------------------------------------------------------------
+
+def test_detector_fusion_fires_vision_patterns(det_cfg):
+    params = init_vision(jax.random.PRNGKey(0), det_cfg)
+
+    def f(params, images):
+        return detect_forward(params, images, det_cfg)
+
+    recs = capture(f, params, _images(det_cfg, 1))
+    fused, report = fuse_records(recs)
+    assert report.fired.get("fused_interpolate_add", 0) >= 1
+    assert report.fired.get("fused_box_decode", 0) >= 1
+    assert report.records_after < report.records_before
+    assert report.bytes_after <= report.bytes_before
+
+
+def test_pos_embed_interpolation_collapses(cls_cfg):
+    """With no consumer adjacent to the resize, the intra-site pattern
+    collapses the bilinear gather/lerp train into one launch."""
+    params = init_vision(jax.random.PRNGKey(0), cls_cfg)
+    big = cls_cfg.image_size + 2 * cls_cfg.patch_size
+
+    def f(params, images):
+        return vit_classify(params, images, cls_cfg)
+
+    _, report = fuse_records(capture(f, params, _images(cls_cfg, 1,
+                                                        size=big)))
+    assert report.fired.get("fused_interpolate", 0) \
+        + report.fired.get("fused_interpolate_add", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# nn.interpolate_bilinear: dtype preservation + oracle parity (the bugfix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hw,out_hw", [((8, 8), (16, 16)),
+                                       ((7, 5), (13, 11)),
+                                       ((12, 12), (6, 6))])
+def test_interpolate_bilinear_oracle_parity(hw, out_hw, dt, rng):
+    x = jax.random.normal(rng, (2, 3) + hw, jnp.float32).astype(dt)
+    got = nn.interpolate_bilinear(x, out_hw)
+    want = ref.interpolate_bilinear(x, out_hw)
+    assert got.shape == (2, 3) + out_hw
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2 if dt == jnp.bfloat16 else 1e-6)
+
+
+def test_interpolate_bilinear_preserves_dtype(rng):
+    # regression: f32 lerp weights used to upcast bf16 activations
+    x = jax.random.normal(rng, (1, 4, 8, 8), jnp.float32)
+    assert nn.interpolate_bilinear(x.astype(jnp.bfloat16),
+                                   (16, 16)).dtype == jnp.bfloat16
+    assert nn.interpolate_bilinear(x, (16, 16)).dtype == jnp.float32
+
+
+def test_interpolate_bilinear_identity_resize(rng):
+    x = jax.random.normal(rng, (1, 2, 6, 6), jnp.float32)
+    np.testing.assert_allclose(np.asarray(nn.interpolate_bilinear(x, (6, 6))),
+                               np.asarray(x), atol=1e-6)
+
+
+def test_interpolate_bilinear_fewer_gathers(rng):
+    """The hoisted form gathers two row-copies of x, not four."""
+    x = jax.random.normal(rng, (1, 4, 8, 8), jnp.float32)
+    recs = capture(lambda a: nn.interpolate_bilinear(a, (16, 16)), x)
+    full_row_gathers = [r for r in recs if r.prim == "gather"
+                        and r.out_shapes and r.out_shapes[0][-1] == 8
+                        and r.out_shapes[0][-2] == 16]
+    assert len(full_row_gathers) == 2
+
+
+# ---------------------------------------------------------------------------
+# bench: vision section + shared invariant + compare gate
+# ---------------------------------------------------------------------------
+
+def _mk_row(case="det b-1", variant="fp32", kind="detection", total=1.0,
+            roi=0.2, interp=0.1, reduction=0.05):
+    nongemm = min(roi + interp + reduction + 0.1, 1.0)
+    return {
+        "case": case, "mode": "eager_a100_model", "variant": variant,
+        "kind": kind, "total_s": total, "gemm_frac": 1.0 - nongemm,
+        "nongemm_frac": nongemm,
+        "group_fracs": {"roi": roi, "interpolation": interp,
+                        "reduction": reduction},
+        "roi_frac": roi, "interp_frac": interp, "n_ops": 10,
+    }
+
+
+def test_check_vision_invariant_accepts_good_rows():
+    from repro.bench.schema import check_vision_invariant
+    rows = [_mk_row(), _mk_row(variant="fused", total=0.5),
+            _mk_row(case="cls b-1", kind="classification", roi=0.0,
+                    interp=0.0),
+            _mk_row(case="cls b-1", kind="classification", variant="fused",
+                    total=0.5, roi=0.0, interp=0.0)]
+    assert check_vision_invariant(rows) == []
+
+
+def test_check_vision_invariant_flags_zero_roi_interp():
+    from repro.bench.schema import check_vision_invariant
+    rows = [_mk_row(roi=0.0), _mk_row(variant="fused", total=0.5, roi=0.0)]
+    msgs = [m for _, m in check_vision_invariant(rows)]
+    assert any("RoI" in m for m in msgs)
+    rows = [_mk_row(interp=0.0), _mk_row(variant="fused", total=0.5,
+                                         interp=0.0)]
+    msgs = [m for _, m in check_vision_invariant(rows)]
+    assert any("Interpolation" in m for m in msgs)
+
+
+def test_check_vision_invariant_flags_pooling_in_other():
+    from repro.bench.schema import check_vision_invariant
+    rows = [_mk_row(reduction=0.0), _mk_row(variant="fused", total=0.5,
+                                            reduction=0.0)]
+    msgs = [m for _, m in check_vision_invariant(rows)]
+    assert any("Reduction" in m for m in msgs)
+
+
+def test_check_vision_invariant_flags_missing_detection_and_slow_fused():
+    from repro.bench.schema import check_vision_invariant
+    rows = [_mk_row(kind="classification", roi=0.0, interp=0.0)]
+    msgs = [m for _, m in check_vision_invariant(rows)]
+    assert any("detection" in m for m in msgs)
+    rows = [_mk_row(), _mk_row(variant="fused", total=2.0)]
+    msgs = [m for _, m in check_vision_invariant(rows)]
+    assert any("fusion must reduce" in m for m in msgs)
+
+
+def test_compare_gates_vision_invariant_on_candidate():
+    from repro.bench.compare import compare_artifacts
+    from repro.bench.schema import BenchResult, SectionResult
+
+    def artifact(rows):
+        return BenchResult(
+            tier="quick", backend="cpu", jax_version="0",
+            sections=[SectionResult(name="vision", title="vision",
+                                    status="ok", wall_s=1.0, rows=rows)])
+
+    good = [_mk_row(), _mk_row(variant="fused", total=0.5)]
+    bad = [_mk_row(roi=0.0), _mk_row(variant="fused", total=0.5, roi=0.0)]
+    findings = compare_artifacts(artifact(good), artifact(bad),
+                                 tolerance=1.0)
+    assert any(f.severity == "regression" and "RoI" in f.message
+               for f in findings)
+    findings = compare_artifacts(artifact(good), artifact(good))
+    assert not [f for f in findings if f.severity == "regression"]
+
+
+@pytest.mark.slow
+def test_vision_section_rows_pass_gate():
+    """The real quick-tier vision section satisfies its own invariant."""
+    from repro.bench.cases import VISION_CASES, clear_caches
+    from repro.bench.sections import vision_rows
+    try:
+        rows = vision_rows(VISION_CASES)
+    finally:
+        clear_caches()
+    assert {r["variant"] for r in rows} == {"fp32", "fused"}
+    det = [r for r in rows if r["kind"] == "detection"
+           and r["variant"] == "fp32"]
+    assert det and all(r["roi_frac"] > 0 and r["interp_frac"] > 0
+                       for r in det)
