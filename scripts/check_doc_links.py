@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Check that relative markdown links in README.md and docs/*.md resolve.
+
+CI runs this as a docs gate: every ``[text](target)`` whose target is a
+relative path must point at an existing file (or directory) in the repo.
+Anchors (``#section``) are stripped before the existence check; absolute
+URLs (``https:``, ``mailto:`` — anything with a scheme) and pure
+in-page anchors (``#...``) are skipped. Exit 1 listing every miss.
+
+Usage::
+
+    python scripts/check_doc_links.py [repo_root]
+"""
+
+import pathlib
+import re
+import sys
+
+#: inline markdown links, skipping images' leading "!" is unnecessary —
+#: image targets must resolve too. Excludes targets with spaces+titles
+#: (``(path "title")``) by cutting at the first whitespace.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.\-]*:")
+
+
+def iter_doc_files(root: pathlib.Path):
+    readme = root / "README.md"
+    if readme.is_file():
+        yield readme
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path):
+    """Yield ``(line_no, target)`` for every broken relative link."""
+    for line_no, line in enumerate(path.read_text().splitlines(), 1):
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if _SCHEME_RE.match(target) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            base = root if rel.startswith("/") else path.parent
+            if not (base / rel.lstrip("/")).exists():
+                yield line_no, target
+
+
+def main(argv=None):
+    args = argv if argv is not None else sys.argv[1:]
+    root = pathlib.Path(args[0]) if args else pathlib.Path(".")
+    broken = []
+    n_files = 0
+    for doc in iter_doc_files(root):
+        n_files += 1
+        for line_no, target in check_file(doc, root):
+            broken.append((doc.relative_to(root), line_no, target))
+    if broken:
+        for doc, line_no, target in broken:
+            print(f"{doc}:{line_no}: broken link -> {target}")
+        print(f"\n{len(broken)} broken link(s) across {n_files} file(s)")
+        return 1
+    print(f"doc links ok ({n_files} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -274,6 +274,45 @@ def profile_case_fused(alias: str, arch: str, batch: int, seq: int
 
 
 @functools.lru_cache(maxsize=None)
+def profile_case_platforms(alias: str, arch: str, batch: int, seq: int
+                           ) -> Tuple[Tuple[str, ModelProfile], ...]:
+    """One capture, modeled across the whole platform sweep.
+
+    The op stream is hardware-independent, so the case is captured once
+    and re-modeled per :data:`~repro.bench.schema.PLATFORM_SWEEP` spec via
+    :func:`repro.core.model_records` — five platforms for the price of one
+    trace walk. Mode is ``modeled_<hw>`` (the ``cpu`` point here is the
+    *analytic* CPU spec, not the measured eager view)."""
+    from repro.core import get_hardware, model_records
+    from repro.core.graph import capture
+
+    from .schema import PLATFORM_SWEEP
+
+    fn, args = case_workload(arch, batch, seq, alias=alias).build()
+    records = capture(fn, *args)
+    return tuple(
+        (hw, model_records(records, name=alias, hw=get_hardware(hw),
+                           mode=f"modeled_{hw}"))
+        for hw in PLATFORM_SWEEP)
+
+
+@functools.lru_cache(maxsize=None)
+def profile_case_measured(alias: str, arch: str, batch: int, seq: int,
+                          repeats: int = 3) -> ModelProfile:
+    """Measured host profile (jit total + measured attribution) of a case."""
+    return case_workload(arch, batch, seq,
+                         alias=alias).profile("measured", repeats=repeats)
+
+
+@functools.lru_cache(maxsize=None)
+def profile_case_calibrated(alias: str, arch: str, batch: int,
+                            seq: int) -> ModelProfile:
+    """Calibrated-cpu modeled profile (microbench-fitted factors)."""
+    return case_workload(arch, batch, seq,
+                         alias=alias).profile("calibrated:cpu")
+
+
+@functools.lru_cache(maxsize=None)
 def profile_case_vision(alias: str, arch: str, batch: int
                         ) -> Tuple[ModelProfile, ModelProfile]:
     """(fp32, fused) modeled eager-A100 pair for a vision case.
@@ -299,6 +338,9 @@ def clear_caches() -> None:
     profile_case_quantized.cache_clear()
     profile_case_fused.cache_clear()
     profile_case_vision.cache_clear()
+    profile_case_platforms.cache_clear()
+    profile_case_measured.cache_clear()
+    profile_case_calibrated.cache_clear()
     _profile_case_modeled.cache_clear()
     build.cache_clear()
     build_serving.cache_clear()

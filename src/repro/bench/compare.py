@@ -23,7 +23,7 @@ What is gated, and how:
                        so they are only checked when ``--time-tolerance``
                        is given (relative, e.g. 3.0 = up to 4x slower).
 
-Three paper invariants are re-checked on the *candidate* artifact itself
+Four paper invariants are re-checked on the *candidate* artifact itself
 (not just diffed against the baseline):
 
   * quantized §4.4  — per (case, mode), the int8-QDQ NonGEMM share must
@@ -38,6 +38,11 @@ Three paper invariants are re-checked on the *candidate* artifact itself
                       Interpolation shares, pooling must land in the
                       Reduction group (not OTHER), and the fused vision
                       variant must beat fp32 on total modeled latency.
+  * platforms       — per case, all five platform models present, the
+                      NPU-like point shows the highest NonGEMM share, and
+                      NonGEMM share grows as GEMM gets cheaper (paper
+                      Table 3); measured + calibrated host rows must carry
+                      per-group drift maps.
 
 Rows present only in the *new* artifact are additions, never regressions.
 Exit codes: 0 clean, 1 regressions found, 2 bad input.
@@ -52,7 +57,8 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 from .schema import (SHARE_SECTIONS, BenchResult, SchemaError,
-                     check_fusion_invariant, check_vision_invariant)
+                     check_fusion_invariant, check_platforms_invariant,
+                     check_vision_invariant)
 
 SHARE_KEYS = ("gemm_frac", "nongemm_frac")
 
@@ -84,6 +90,7 @@ ROW_KEYS = {
     "quantized": ("case", "mode", "variant"),
     "fusion": ("case", "mode", "variant"),
     "vision": ("case", "mode", "variant"),
+    "platforms": ("case", "platform", "kind"),
 }
 
 
@@ -118,6 +125,16 @@ def _check_vision_direction(sec, findings: List["Finding"]) -> None:
     shares nonzero, pooling in Reduction, fused below fp32) — the same
     ``check_vision_invariant`` the vision section gates itself with."""
     for where, message in check_vision_invariant(sec.rows):
+        findings.append(Finding("regression", where, message))
+
+
+def _check_platforms_direction(sec, findings: List["Finding"]) -> None:
+    """Paper Table 3 invariant on the *new* artifact (full sweep present,
+    NPU-like point highest NonGEMM share, share grows as GEMM gets
+    cheaper, host drift rows present) — the same
+    ``check_platforms_invariant`` the platforms section gates itself
+    with."""
+    for where, message in check_platforms_invariant(sec.rows):
         findings.append(Finding("regression", where, message))
 
 
@@ -282,6 +299,9 @@ def compare_artifacts(old: BenchResult, new: BenchResult,
     vi = new.section("vision")
     if vi is not None and vi.status == "ok":
         _check_vision_direction(vi, findings)
+    pl = new.section("platforms")
+    if pl is not None and pl.status == "ok":
+        _check_platforms_direction(pl, findings)
     return findings
 
 
@@ -344,6 +364,26 @@ def render_summary_markdown(old: BenchResult, new: BenchResult,
                 f"| {100*float(r.get('roi_frac', 0.0)):.1f} "
                 f"| {100*float(r.get('interp_frac', 0.0)):.1f} "
                 f"| {100*float(gf.get('reduction', 0.0)):.1f} |")
+    pl = new.section("platforms")
+    if pl is not None and pl.status == "ok" and pl.rows:
+        lines += [
+            "",
+            "### platforms (Table 3: NonGEMM share vs GEMM cost, candidate)",
+            "",
+            "| case | platform | kind | total | GEMM | GEMM% | NonGEMM% "
+            "| max\\|log2 drift\\| |",
+            "|---|---|---|---:|---:|---:|---:|---:|",
+        ]
+        for r in pl.rows:
+            drift = r.get("max_abs_log2_drift")
+            drift_cell = f"{float(drift):.2f}" if drift is not None else "—"
+            lines.append(
+                f"| {r.get('case')} | {r.get('platform')} | {r.get('kind')} "
+                f"| {float(r.get('total_s', 0.0))*1e3:.3f}ms "
+                f"| {float(r.get('gemm_s', 0.0))*1e3:.3f}ms "
+                f"| {100*float(r.get('gemm_frac', 0.0)):.1f} "
+                f"| {100*float(r.get('nongemm_frac', 0.0)):.1f} "
+                f"| {drift_cell} |")
     return "\n".join(lines) + "\n"
 
 

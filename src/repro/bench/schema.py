@@ -41,7 +41,7 @@ KNOWN_TIERS = ("quick", "full")
 #: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
 #: present; the serving section's "engine" rows carry throughput instead)
 SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving",
-                  "quantized", "fusion", "vision")
+                  "quantized", "fusion", "vision", "platforms")
 
 #: fusion section (paper §6): unfused variant -> its fused twin, per
 #: (case, mode). Both the section's own gate (repro.bench.sections) and
@@ -51,6 +51,21 @@ FUSION_VARIANT_PAIRS = (("fp32", "fused"), ("int8-qdq", "int8-qdq+fused"))
 #: the §6 residual bottleneck: at least one case must keep this much
 #: NonGEMM share after fusion (fusion reduces, never eliminates)
 FUSION_RESIDUAL_FLOOR = 0.15
+
+
+#: the platforms section sweeps every quick case over these hardware specs
+#: (must stay in sync with repro.core.hardware.BY_NAME; asserted by tests)
+PLATFORM_SWEEP = ("tpu_v5e", "a100", "cpu", "npu_ryzen", "membound_dimm")
+
+#: the paper's NonGEMM-share invariant is only enforced between platforms
+#: whose modeled GEMM time differs by more than this relative margin —
+#: near-ties carry no ordering signal
+PLATFORM_GEMM_MARGIN = 0.10
+
+#: the platform whose operating point makes GEMM cheapest relative to its
+#: NonGEMM path — the paper's "NonGEMM share is highest where GEMM is
+#: nearly free" extreme
+PLATFORM_NPU = "npu_ryzen"
 
 
 def _is_num(v) -> bool:
@@ -161,6 +176,88 @@ def check_vision_invariant(rows: Sequence[dict]) -> List[tuple]:
                 f"(paper §6)")))
     return violations
 
+def check_platforms_invariant(rows: Sequence[dict]) -> List[tuple]:
+    """The cross-platform invariant over platforms-section rows.
+
+    Single implementation shared by the section's own gate
+    (``repro.bench.sections.platform_rows`` raises on any violation) and
+    the compare CLI (regression Findings on the candidate artifact).
+    Modeled rows (``kind == "modeled"``) must satisfy, per case:
+
+    * all of :data:`PLATFORM_SWEEP` is present;
+    * :data:`PLATFORM_NPU` has the strictly highest NonGEMM share — the
+      NPU-like point makes GEMM nearly free, so what's left is NonGEMM;
+    * pairwise concordance: when one platform's modeled GEMM time is
+      cheaper than another's by more than :data:`PLATFORM_GEMM_MARGIN`,
+      its NonGEMM share must not be lower (the paper's Table 3 trend:
+      NonGEMM share grows as GEMM gets cheaper).
+
+    Measured/calibrated host rows (``kind`` ``"measured"``/``"calibrated"``)
+    must exist and carry a non-empty numeric ``drift`` map — the
+    measured-vs-modeled evidence this section exists to provide.
+    """
+    violations: List[tuple] = []
+    by_case: Dict[str, Dict[str, dict]] = {}
+    drift_kinds = set()
+    for row in rows:
+        kind = str(row.get("kind"))
+        if kind == "modeled":
+            by_case.setdefault(str(row.get("case")), {})[
+                str(row.get("platform"))] = row
+        elif kind in ("measured", "calibrated"):
+            drift = row.get("drift")
+            if isinstance(drift, dict) and drift and \
+                    all(_is_num(v) for v in drift.values()):
+                drift_kinds.add(kind)
+            else:
+                violations.append((
+                    f"platforms[{row.get('case')}, {kind}]",
+                    f"{kind} row must carry a non-empty numeric 'drift' "
+                    f"map, got {drift!r}"))
+    for case, by_platform in sorted(by_case.items()):
+        missing = [p for p in PLATFORM_SWEEP if p not in by_platform]
+        if missing:
+            violations.append((f"platforms[{case}]",
+                               f"missing platforms {missing} (sweep "
+                               f"requires all of {list(PLATFORM_SWEEP)})"))
+            continue
+        npu_share = by_platform[PLATFORM_NPU].get("nongemm_frac")
+        for p, row in sorted(by_platform.items()):
+            share = row.get("nongemm_frac")
+            gemm = row.get("gemm_s")
+            if not (_is_num(share) and _is_num(gemm)):
+                violations.append((f"platforms[{case}, {p}]",
+                                   f"row needs numeric nongemm_frac/gemm_s, "
+                                   f"got {share!r}/{gemm!r}"))
+                continue
+            if p != PLATFORM_NPU and _is_num(npu_share) and \
+                    not float(npu_share) > float(share):
+                violations.append((f"platforms[{case}]", (
+                    f"{PLATFORM_NPU} NonGEMM share {npu_share:.4f} is not "
+                    f"above {p}'s {share:.4f} — the NPU-like point must "
+                    f"show the highest NonGEMM share (paper Table 3)")))
+            for q, other in sorted(by_platform.items()):
+                og, os_ = other.get("gemm_s"), other.get("nongemm_frac")
+                if q == p or not (_is_num(og) and _is_num(os_)):
+                    continue
+                if float(gemm) < float(og) * (1.0 - PLATFORM_GEMM_MARGIN) \
+                        and float(share) < float(os_):
+                    violations.append((f"platforms[{case}]", (
+                        f"{p} has cheaper GEMM ({gemm:.4g}s vs {q}'s "
+                        f"{og:.4g}s) but lower NonGEMM share "
+                        f"({share:.4f} vs {os_:.4f}) — NonGEMM share "
+                        f"must grow as GEMM gets cheaper (paper Table 3)")))
+    if rows:
+        for kind in ("measured", "calibrated"):
+            if kind not in drift_kinds and not any(
+                    v[0].endswith(f", {kind}]") for v in violations):
+                violations.append(("section platforms", (
+                    f"no {kind} host row with a drift map — the section "
+                    f"must report measured-vs-modeled drift on the host "
+                    f"CPU")))
+    return violations
+
+
 #: row keys required per known section (subset check; rows may carry more)
 SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
     "breakdown": ("case", "mode", "total_s", "gemm_frac", "nongemm_frac",
@@ -180,6 +277,8 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
                "nongemm_frac", "group_fracs", "fused_frac"),
     "vision": ("case", "mode", "variant", "kind", "total_s", "gemm_frac",
                "nongemm_frac", "group_fracs", "roi_frac", "interp_frac"),
+    "platforms": ("case", "platform", "kind", "mode", "total_s", "gemm_s",
+                  "gemm_frac", "nongemm_frac", "group_fracs"),
 }
 
 

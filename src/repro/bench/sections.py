@@ -17,11 +17,13 @@ from repro.core.microbench import TABLE2_SHAPES, run_micro
 from repro.core.report import profile_row
 
 from .cases import (SERVING_CASES, VISION_CASES, build, build_serving,
-                    profile_case, profile_case_compiled, profile_case_fused,
+                    profile_case, profile_case_calibrated,
+                    profile_case_compiled, profile_case_fused,
+                    profile_case_measured, profile_case_platforms,
                     profile_case_quantized, profile_case_vision, tier_cases)
 from .runner import BenchContext, SkipSection, register_section
 from .schema import (BenchCase, check_fusion_invariant,
-                     check_vision_invariant)
+                     check_platforms_invariant, check_vision_invariant)
 
 
 def _results_root() -> str:
@@ -225,6 +227,65 @@ def section_vision(ctx: BenchContext) -> List[dict]:
     if not cases:
         raise SkipSection(f"no vision cases in tier {ctx.tier!r}")
     return vision_rows(cases)
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — multi-platform hardware sweep + measured host drift
+# ---------------------------------------------------------------------------
+
+def platform_rows(cases: Sequence[BenchCase]) -> List[dict]:
+    """The platform sweep plus the measured-vs-modeled host evidence.
+
+    Per case, one ``kind="modeled"`` row per
+    :data:`~repro.bench.schema.PLATFORM_SWEEP` spec — one capture,
+    re-modeled per platform, so the sweep is deterministic and cheap. For
+    the first case, two host rows ride along: ``kind="measured"`` (jit
+    end-to-end + measured attribution) and ``kind="calibrated"``
+    (microbench-fitted correction factors), each carrying a per-group
+    ``drift`` map vs the *modeled* ``cpu`` spec. Structurally asserts —
+    via the same ``check_platforms_invariant`` the compare CLI re-runs on
+    candidates — the paper's Table 3 trend: NonGEMM share grows as GEMM
+    gets cheaper, peaking at the NPU-like point.
+    """
+    from repro.core.calibrate import drift_by_group, max_abs_log2_drift
+
+    rows: List[dict] = []
+    modeled_cpu_first = None
+    for i, c in enumerate(cases):
+        for hw, p in profile_case_platforms(c.alias, c.arch, c.batch, c.seq):
+            row = profile_row(p)
+            row.update(platform=hw, kind="modeled",
+                       gemm_s=p.group_seconds.get("gemm", 0.0))
+            rows.append(row)
+            if i == 0 and hw == "cpu":
+                modeled_cpu_first = p
+    c0 = cases[0]
+    for kind, p in (
+            ("measured",
+             profile_case_measured(c0.alias, c0.arch, c0.batch, c0.seq)),
+            ("calibrated",
+             profile_case_calibrated(c0.alias, c0.arch, c0.batch, c0.seq))):
+        drift = drift_by_group(p.group_seconds,
+                               modeled_cpu_first.group_seconds)
+        row = profile_row(p)
+        row.update(platform="cpu", kind=kind,
+                   gemm_s=p.group_seconds.get("gemm", 0.0),
+                   drift=drift,
+                   max_abs_log2_drift=max_abs_log2_drift(drift))
+        rows.append(row)
+    violations = check_platforms_invariant(rows)
+    if violations:
+        raise AssertionError("; ".join(f"{w}: {m}" for w, m in violations))
+    return rows
+
+
+@register_section(
+    "platforms",
+    title="Table 3 — platform sweep: NonGEMM share vs GEMM cost across "
+          "five hardware models, with measured host drift",
+    timeout_s=360.0)
+def section_platforms(ctx: BenchContext) -> List[dict]:
+    return platform_rows(ctx.cases)
 
 
 # ---------------------------------------------------------------------------

@@ -8,13 +8,20 @@ from .taxonomy import (OpGroup, NONGEMM_GROUPS, scope_tag, parse_scope,
                        classify, classify_hlo, is_gemm, is_nongemm)
 from .graph import OpRecord, capture, harvest_shapes
 from .interpreter import ProfilingInterpreter, TimedOp
-from .hlo import HloAnalysis, analyze_hlo, collective_bytes
-from .hardware import HardwareSpec, TPU_V5E, GPU_A100, CPU_HOST, get_hardware
+from .hlo import (HloAnalysis, HloProfile, ProfiledOp, analyze_hlo,
+                  collective_bytes, parse_hlo_profile)
+from .hardware import (HardwareSpec, TPU_V5E, GPU_A100, CPU_HOST, NPU_RYZEN,
+                       MEMBOUND_DIMM, get_hardware, list_hardware)
 from .roofline import (RooflineTerms, roofline_from_hlo, group_latency_model,
                        gemm_nongemm_split, train_model_flops,
                        decode_model_flops, attention_flops)
-from .profiler import (ModelProfile, profile_eager, profile_accelerated,
-                       profile_accelerated_eager, profile_wallclock)
+from .profiler import (ModelProfile, model_records, profile_eager,
+                       profile_accelerated, profile_accelerated_eager,
+                       profile_wallclock)
+from .calibrate import (CalibratedHardwareSpec, CalibrationError,
+                        calibrate, calibrate_from_microbench, drift_by_group,
+                        fit_factors, load_calibration, max_abs_log2_drift,
+                        save_calibration)
 from .workload import (Workload, ProfilerBackend, Transform,
                        QuantizeDequantTransform, register_backend,
                        get_backend, list_backends)
@@ -26,10 +33,15 @@ __all__ = [
     "OpGroup", "NONGEMM_GROUPS", "scope_tag", "parse_scope", "classify",
     "classify_hlo", "is_gemm", "is_nongemm", "OpRecord", "capture",
     "harvest_shapes", "ProfilingInterpreter", "TimedOp", "HloAnalysis",
-    "analyze_hlo", "collective_bytes", "HardwareSpec", "TPU_V5E", "GPU_A100",
-    "CPU_HOST", "get_hardware", "RooflineTerms", "roofline_from_hlo",
+    "HloProfile", "ProfiledOp", "analyze_hlo", "collective_bytes",
+    "parse_hlo_profile", "HardwareSpec", "TPU_V5E", "GPU_A100",
+    "CPU_HOST", "NPU_RYZEN", "MEMBOUND_DIMM", "get_hardware",
+    "list_hardware", "RooflineTerms", "roofline_from_hlo",
     "group_latency_model", "gemm_nongemm_split", "train_model_flops",
-    "decode_model_flops", "attention_flops", "ModelProfile",
+    "decode_model_flops", "attention_flops", "ModelProfile", "model_records",
+    "CalibratedHardwareSpec", "CalibrationError", "calibrate",
+    "calibrate_from_microbench", "drift_by_group", "fit_factors",
+    "load_calibration", "max_abs_log2_drift", "save_calibration",
     "Workload", "ProfilerBackend", "Transform", "QuantizeDequantTransform",
     "FusionPattern", "FusionReport", "FusionTransform", "FUSION_PATTERNS",
     "fuse_records", "fusion_report",

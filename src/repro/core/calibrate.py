@@ -1,0 +1,204 @@
+"""Measured-vs-modeled calibration for the hardware platform models.
+
+The analytic :class:`~repro.core.hardware.HardwareSpec` rooflines are only
+trustworthy insofar as they track something real. This module closes the
+loop on the one platform we can actually execute on (the host CPU), and
+gives the same machinery to any future measured target:
+
+1. run the NonGEMM microbench suite (``core/microbench.py``) and record
+   *measured* compiled wall time next to the *modeled* roofline time on a
+   chosen spec;
+2. fit one correction factor per operator group — the ratio of measured to
+   modeled time, pooled over the suite (ratio of sums, so big ops dominate
+   rather than every tiny op voting equally);
+3. emit a versioned :class:`CalibratedHardwareSpec` that the
+   ``calibrated:<hw>`` profiler backend (``core/workload.py``) applies on
+   top of the base roofline, so reports can show modeled, measured, and
+   calibrated columns plus a drift metric.
+
+Calibration sources are interchangeable: factors can equally be fitted from
+an ``--xla_hlo_profile`` dump parsed by
+:func:`repro.core.hlo.parse_hlo_profile` — anything that yields
+``(group, measured_s, modeled_s)`` samples. See ``docs/hardware.md`` for
+the end-to-end workflow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from collections import defaultdict
+from functools import lru_cache
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from .hardware import HardwareSpec, get_hardware
+
+#: Serialization format version; bump on incompatible factor semantics.
+CALIBRATION_VERSION = 1
+
+#: Default microbench subset for fitting: covers the NonGEMM groups the
+#: bench workloads actually exercise, kept small so fitting stays cheap
+#: (each op is one jit compile + a few timed runs).
+DEFAULT_CALIBRATION_OPS: Tuple[str, ...] = (
+    "add", "mul", "softmax", "rms_norm", "layer_norm", "gelu", "silu",
+    "reshape_permute",
+)
+
+#: One fitting sample: (group value, measured seconds, modeled seconds).
+Sample = Tuple[str, float, float]
+
+
+class CalibrationError(ValueError):
+    """Raised on unusable calibration inputs or incompatible artifacts."""
+
+
+def fit_factors(samples: Iterable[Sample]) -> Dict[str, float]:
+    """Per-group correction factors: sum(measured) / sum(modeled).
+
+    Groups whose pooled modeled time is zero are skipped — there is nothing
+    to correct against. A profile synthesized from the spec's own model
+    (measured == modeled) recovers factors of exactly 1.0.
+    """
+    meas: Dict[str, float] = defaultdict(float)
+    model: Dict[str, float] = defaultdict(float)
+    for group, measured_s, modeled_s in samples:
+        meas[group] += measured_s
+        model[group] += modeled_s
+    return {g: meas[g] / model[g] for g in sorted(model) if model[g] > 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedHardwareSpec:
+    """A base :class:`HardwareSpec` plus fitted per-group correction factors.
+
+    Duck-types the spec's ``group_time``/``group_mem_time`` so the profiler
+    backends can use either interchangeably; groups without a fitted factor
+    fall back to 1.0 (the uncorrected roofline).
+    """
+
+    base: HardwareSpec
+    factors: Tuple[Tuple[str, float], ...]   # ((group, factor), ...)
+    version: int = CALIBRATION_VERSION
+    source: str = ""                          # how/where the fit was made
+
+    @property
+    def name(self) -> str:
+        return f"{self.base.name}+cal"
+
+    def factor(self, group: str) -> float:
+        for g, f in self.factors:
+            if g == group:
+                return f
+        return 1.0
+
+    def group_time(self, group: str, flops: float, nbytes: float,
+                   dtype: str = "bf16") -> float:
+        return self.base.group_time(group, flops, nbytes, dtype) \
+            * self.factor(group)
+
+    def group_mem_time(self, group: str, nbytes: float) -> float:
+        return self.base.group_mem_time(group, nbytes) * self.factor(group)
+
+    def to_dict(self) -> dict:
+        return {
+            "version": self.version,
+            "base": self.base.name,
+            "factors": {g: f for g, f in self.factors},
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CalibratedHardwareSpec":
+        version = d.get("version")
+        if version != CALIBRATION_VERSION:
+            raise CalibrationError(
+                f"calibration artifact version {version!r} != supported "
+                f"{CALIBRATION_VERSION}")
+        return cls(base=get_hardware(d["base"]),
+                   factors=tuple(sorted(d.get("factors", {}).items())),
+                   version=version, source=d.get("source", ""))
+
+
+def calibrate(hw: HardwareSpec, samples: Iterable[Sample],
+              source: str = "") -> CalibratedHardwareSpec:
+    factors = fit_factors(samples)
+    if not factors:
+        raise CalibrationError("no usable samples (all modeled times zero?)")
+    return CalibratedHardwareSpec(
+        base=hw, factors=tuple(sorted(factors.items())), source=source)
+
+
+def save_calibration(cal: CalibratedHardwareSpec, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(cal.to_dict(), f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_calibration(path: str) -> CalibratedHardwareSpec:
+    with open(path) as f:
+        return CalibratedHardwareSpec.from_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Fitting sources
+# ---------------------------------------------------------------------------
+
+def microbench_samples(hw: HardwareSpec,
+                       names: Optional[Sequence[str]] = None,
+                       repeats: int = 5) -> list:
+    """Measured-vs-modeled samples from the Table-2 micro suite.
+
+    Measured is compiled host wall time (``jit_us``); modeled is the spec's
+    group-aware bandwidth roofline for the same bytes (``tpu_model_us``,
+    computed against ``hw``).
+    """
+    from .microbench import run_micro
+    out = []
+    for name in (names or DEFAULT_CALIBRATION_OPS):
+        r = run_micro(name, repeats=repeats, hw=hw, measure_eager=False)
+        out.append((r.group, 1e-6 * r.jit_us, 1e-6 * r.tpu_model_us))
+    return out
+
+
+def calibrate_from_microbench(hw: HardwareSpec,
+                              names: Optional[Sequence[str]] = None,
+                              repeats: int = 5) -> CalibratedHardwareSpec:
+    names = tuple(names or DEFAULT_CALIBRATION_OPS)
+    return calibrate(hw, microbench_samples(hw, names, repeats=repeats),
+                     source=f"microbench:{','.join(names)}@host")
+
+
+@lru_cache(maxsize=None)
+def default_calibration(hw_name: str) -> CalibratedHardwareSpec:
+    """Memoized default fit for ``calibrated:<hw>`` backends.
+
+    Measuring happens once per spec per process (a few jit compiles); the
+    cache key is the registry name so frozen-spec identity doesn't matter.
+    """
+    return calibrate_from_microbench(get_hardware(hw_name), repeats=3)
+
+
+# ---------------------------------------------------------------------------
+# Drift: how far apart two per-group time breakdowns are
+# ---------------------------------------------------------------------------
+
+def drift_by_group(measured: Dict[str, float],
+                   modeled: Dict[str, float]) -> Dict[str, float]:
+    """Per-group measured/modeled time ratios (1.0 == perfect model).
+
+    Only groups the model assigns nonzero time to are comparable; others
+    are omitted rather than reported as infinite drift.
+    """
+    return {g: measured.get(g, 0.0) / t
+            for g, t in sorted(modeled.items()) if t > 0}
+
+
+def max_abs_log2_drift(drift: Dict[str, float]) -> float:
+    """Worst-group drift in doublings: max |log2(ratio)|, 0.0 if empty.
+
+    Symmetric in over/under-prediction: a model 4x too fast and one 4x too
+    slow both score 2.0.
+    """
+    vals = [abs(math.log2(r)) for r in drift.values() if r > 0]
+    return max(vals) if vals else 0.0

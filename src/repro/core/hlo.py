@@ -722,3 +722,103 @@ def analyze_partitioned(hlo_text: str, detail: Optional[list] = None,
 
     visit(entry, 1.0)
     return out
+
+
+# ---------------------------------------------------------------------------
+# --xla_hlo_profile parser: measured per-instruction timings.
+#
+# With TF_CPP_MIN_LOG_LEVEL=0 XLA_FLAGS=--xla_hlo_profile, XLA logs one
+# profile block per executed module (see SNIPPETS.md Snippet 1): each line is
+# "::"-separated columns
+#
+#   <N> cycles (<pct>% <cum>S) :: <t> usec (<opt> optimal) :: <rate> ...
+#       :: <instruction text | [total] [entry]>
+#
+# usually behind a log preamble ("2019-08-08 ... executable.cc:174]").
+# This parser feeds the `measured` profiler backend (workload.py): measured
+# microseconds per instruction, attributed to paper operator groups through
+# the same classify_hlo() path as the modeled views.
+# ---------------------------------------------------------------------------
+
+_PROFILE_LINE_RE = re.compile(
+    r"(?P<cycles>[0-9][0-9.eE+]*)\s+cycles\s*\([^)]*\)\s*::\s*"
+    r"(?P<usec>[0-9][0-9.eE+]*)\s+usec")
+
+
+@dataclasses.dataclass
+class ProfiledOp:
+    """One timed instruction from an --xla_hlo_profile dump."""
+
+    name: str
+    opcode: str
+    usec: float
+    cycles: float
+    group: str           # OpGroup value, via classify_hlo
+    op_site: str
+    op_name: str = ""
+
+
+@dataclasses.dataclass
+class HloProfile:
+    """Parsed --xla_hlo_profile block: measured per-group microseconds."""
+
+    ops: List[ProfiledOp] = dataclasses.field(default_factory=list)
+    entry_usec: float = 0.0   # the "[total] [entry]" line, 0.0 if absent
+    n_malformed: int = 0      # timed lines whose instruction text didn't parse
+
+    @property
+    def total_usec(self) -> float:
+        """Entry-computation total if the dump carried one, else the op sum."""
+        return self.entry_usec if self.entry_usec > 0 else (
+            sum(op.usec for op in self.ops))
+
+    @property
+    def group_usec(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for op in self.ops:
+            out[op.group] += op.usec
+        return dict(out)
+
+    def group_seconds(self) -> Dict[str, float]:
+        return {g: 1e-6 * us for g, us in self.group_usec.items()}
+
+
+def parse_hlo_profile(text: str) -> HloProfile:
+    """Parse ``--xla_hlo_profile`` log output into measured per-op times.
+
+    Tolerant by construction: non-profile lines (log chatter, the raw HLO
+    module text with its ``} // name`` computation closers, the
+    "microseconds report" footer) simply don't match the timed-line shape
+    and are skipped. Timed lines whose trailing instruction text cannot be
+    parsed are counted in ``n_malformed`` rather than raising. Zero-usec
+    ops are kept — dropping them would bias the per-group distribution.
+    """
+    prof = HloProfile()
+    for line in text.splitlines():
+        m = _PROFILE_LINE_RE.search(line)
+        if m is None:
+            continue
+        try:
+            cycles = float(m.group("cycles"))
+            usec = float(m.group("usec"))
+        except ValueError:
+            prof.n_malformed += 1
+            continue
+        tail = line.rsplit("::", 1)[-1].strip()
+        if "[total]" in tail:
+            if "[entry]" in tail:
+                prof.entry_usec = usec
+            continue  # per-subcomputation totals would double-count
+        im = _INSTR_RE.match(tail)
+        if im is None:
+            prof.n_malformed += 1
+            continue
+        _, iname, _, opcode, rest = im.groups()
+        _, trailer = _balanced_operands(rest)
+        md = _METADATA_RE.search(trailer)
+        op_name = md.group(1) if md else ""
+        group, site = classify_hlo(opcode, op_name)
+        prof.ops.append(ProfiledOp(
+            name=iname, opcode=opcode, usec=usec, cycles=cycles,
+            group=group.value, op_site=site, op_name=op_name))
+    return prof

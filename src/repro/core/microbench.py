@@ -287,9 +287,14 @@ TABLE2_SHAPES: Dict[str, tuple] = {
 }
 
 
-def _model_tpu_us(args, out, hw: HardwareSpec) -> tuple[float, float]:
+def _model_tpu_us(args, out, hw: HardwareSpec,
+                  group: str = None) -> tuple[float, float]:
     leaves = jax.tree_util.tree_leaves((args, out))
     nbytes = float(sum(np.prod(l.shape) * dtype_bytes(l.dtype) for l in leaves))
+    if group is not None:
+        # group-aware effective bandwidth; identical to hbm_bw for specs
+        # without an efficiency table (tpu_v5e/a100/cpu)
+        return 1e6 * hw.group_mem_time(group, nbytes), nbytes
     return 1e6 * nbytes / hw.hbm_bw, nbytes
 
 
@@ -307,7 +312,7 @@ def run_micro(name: str, shape: Optional[tuple] = None,
         ops = ProfilingInterpreter(repeats=3).run(fn, *args)
         eager_us = 1e6 * sum(t.seconds for t in ops)
     out = jax.jit(fn)(*args)
-    tpu_us, nbytes = _model_tpu_us(args, out, hw)
+    tpu_us, nbytes = _model_tpu_us(args, out, hw, group=op.group.value)
     return MicroResult(name=name, group=op.group.value, shape=shape,
                        dtype=str(dtype), jit_us=jit_s * 1e6,
                        eager_us=eager_us, tpu_model_us=tpu_us,

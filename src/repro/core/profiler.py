@@ -90,18 +90,46 @@ def _eager_profile(fn: Callable, *args, name: str = "model",
     return _aggregate_timed(name, "eager_cpu", ops)
 
 
+def model_records(records, name: str, hw,
+                  launch_overhead_s: float = 5e-6,
+                  mode: Optional[str] = None) -> ModelProfile:
+    """Model an already-captured OpRecord stream on one platform.
+
+    This is the modeling half of the eager-accelerated view, split out so a
+    single capture can be swept across many :class:`HardwareSpec`s (the
+    ``platforms`` bench section) or a
+    :class:`~repro.core.calibrate.CalibratedHardwareSpec` — ``hw`` needs
+    only a ``group_time(group, flops, nbytes)`` method. Per record:
+    group-aware roofline + ``launch_overhead_s`` per trip.
+    """
+    group_s: dict = defaultdict(float)
+    op_s: dict = defaultdict(float)
+    n = 0
+    for r in records:
+        t = hw.group_time(r.group.value, r.flops, r.bytes_accessed) \
+            + launch_overhead_s * r.trip_count
+        group_s[r.group.value] += t
+        op_s[(r.group.value, r.op_site)] += t
+        n += 1
+    total = sum(group_s.values())
+    return ModelProfile(name=name, mode=mode or f"eager_{hw.name}",
+                        group_seconds=dict(group_s), total_seconds=total,
+                        op_seconds=dict(op_s), n_ops=n)
+
+
 def _accelerated_eager_profile(fn: Callable, *args, name: str = "model",
-                               hw: HardwareSpec = None,
+                               hw=None,
                                launch_overhead_s: float = 5e-6,
                                record_rewrite: Optional[Callable] = None,
+                               mode: Optional[str] = None,
                                **kwargs) -> ModelProfile:
     """The paper's GPU setting: *eager* accelerated execution.
 
     Each captured operator dispatches as its own kernel: per-op
-    max(flops/peak, bytes/bw) + a fixed launch overhead, no fusion. This is
-    the faithful model of the paper's torch-eager GPU measurements (their
-    §4 case studies) — and the baseline our XLA-fused / Pallas views then
-    improve on (§4.5 "bridge the gap").
+    max(flops/peak, bytes/bw) at the group's efficiency point + a fixed
+    launch overhead, no fusion. This is the faithful model of the paper's
+    torch-eager GPU measurements (their §4 case studies) — and the baseline
+    our XLA-fused / Pallas views then improve on (§4.5 "bridge the gap").
     """
     from .graph import capture
     from .hardware import GPU_A100
@@ -110,19 +138,8 @@ def _accelerated_eager_profile(fn: Callable, *args, name: str = "model",
     records = capture(fn, *args, **kwargs)
     if record_rewrite is not None:
         records = record_rewrite(records)
-    group_s: dict = defaultdict(float)
-    op_s: dict = defaultdict(float)
-    n = 0
-    for r in records:
-        t = max(hw.flops_time(r.flops), hw.mem_time(r.bytes_accessed)) \
-            + launch_overhead_s * r.trip_count
-        group_s[r.group.value] += t
-        op_s[(r.group.value, r.op_site)] += t
-        n += 1
-    total = sum(group_s.values())
-    return ModelProfile(name=name, mode=f"eager_{hw.name}",
-                        group_seconds=dict(group_s), total_seconds=total,
-                        op_seconds=dict(op_s), n_ops=n)
+    return model_records(records, name=name, hw=hw,
+                         launch_overhead_s=launch_overhead_s, mode=mode)
 
 
 def _accelerated_profile(fn: Optional[Callable], *args, name: str = "model",
@@ -142,7 +159,7 @@ def _accelerated_profile(fn: Optional[Callable], *args, name: str = "model",
     # op-site attribution at instruction granularity
     op_s: dict = defaultdict(float)
     for g, cost in analysis.by_group.items():
-        op_s[(g, g)] += max(hw.flops_time(cost.flops), hw.mem_time(cost.bytes))
+        op_s[(g, g)] += hw.group_time(g, cost.flops, cost.bytes)
     total = sum(group_s.values())
     return ModelProfile(name=name, mode=f"accelerated_{hw.name}",
                         group_seconds=group_s, total_seconds=total,

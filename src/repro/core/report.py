@@ -318,6 +318,36 @@ def render_vision_rows(rows: Iterable[dict]) -> str:
     return buf.getvalue()
 
 
+def render_platform_rows(rows: Iterable[dict]) -> str:
+    """Platforms section: the Table 3 sweep — NonGEMM share per case
+    across the five hardware models, plus the measured / calibrated host
+    rows with their drift vs the modeled ``cpu`` spec."""
+    buf = io.StringIO()
+    buf.write(f"{'model':<16} {'platform':<15} {'kind':<11} {'total':>12} "
+              f"{'GEMM':>11} {'GEMM%':>7} {'NonGEMM%':>9} {'max|lg2 drift|':>15}\n")
+    rows = list(rows)
+    for r in rows:
+        drift = r.get("max_abs_log2_drift")
+        drift_cell = f"{drift:>15.2f}" if drift is not None else f"{'—':>15}"
+        buf.write(f"{r['case']:<16} {r['platform']:<15} {r['kind']:<11} "
+                  f"{r['total_s']*1e3:>10.3f}ms {r['gemm_s']*1e3:>9.3f}ms "
+                  f"{_fmt_pct(r['gemm_frac']):>7} "
+                  f"{_fmt_pct(r['nongemm_frac']):>9} {drift_cell}\n")
+    if rows:
+        # lazy import for the same reason as the fusion renderer: the
+        # verdict is THE shared gate (section + compare), never a reprint
+        from repro.bench.schema import check_platforms_invariant
+        violations = check_platforms_invariant(rows)
+        if violations:
+            for where, message in violations:
+                buf.write(f"invariant VIOLATED — {where}: {message}\n")
+        else:
+            buf.write("platforms invariant REPRODUCED (NonGEMM share grows "
+                      "as GEMM gets cheaper; NPU-like point highest; host "
+                      "drift rows present)\n")
+    return buf.getvalue()
+
+
 def render_timing_table(sections: Iterable) -> str:
     """Per-section wall-clock summary of a bench run.
 
@@ -374,6 +404,7 @@ SECTION_RENDERERS = {
     "quantized": render_quantized_rows,
     "fusion": render_fusion_rows,
     "vision": render_vision_rows,
+    "platforms": render_platform_rows,
 }
 
 

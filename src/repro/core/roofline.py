@@ -114,7 +114,7 @@ def group_latency_model(analysis: HloAnalysis,
         if g == OpGroup.COLLECTIVE.value:
             t = cost.bytes / hw.link_bw
         else:
-            t = max(hw.flops_time(cost.flops), hw.mem_time(cost.bytes))
+            t = hw.group_time(g, cost.flops, cost.bytes)
         out[g] = t
     return out
 

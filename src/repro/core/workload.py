@@ -19,10 +19,15 @@ entry points:
       ``eager-modeled:<hw>``  per-op roofline + launch overhead (capture)
       ``compiled:<hw>``       jit + HLO parse + per-group roofline model
       ``wallclock``           compiled end-to-end wall time
+      ``measured``            measured jit total + measured attribution, or
+                              an ingested ``--xla_hlo_profile`` dump
+      ``calibrated:<hw>``     eager-modeled with measured/modeled per-group
+                              correction factors (``core/calibrate.py``)
 
   ``<hw>`` is a :mod:`repro.core.hardware` spec name (``a100``,
-  ``tpu_v5e``, ``cpu``); new hardware is a ``register_backend`` call, not a
-  fifth ``profile_*`` function.
+  ``tpu_v5e``, ``cpu``, ``npu_ryzen``, ``membound_dimm`` — see
+  ``docs/hardware.md``); new hardware is a ``register_backend`` call, not
+  a seventh ``profile_*`` function.
 
 * :class:`Transform` — composable workload rewrites applied by
   ``Workload.with_transform(...)`` at build time. The first real one,
@@ -344,6 +349,79 @@ class WallclockBackend(ProfilerBackend):
                             op_seconds={}, n_ops=0)
 
 
+class MeasuredBackend(ProfilerBackend):
+    """Measured execution profile (the only non-modeled attributed view).
+
+    Two ingestion paths:
+
+    * default — the jitted workload's best end-to-end wall time gives
+      ``total_seconds``, and the per-primitive interpreter measures the
+      *relative* per-op-site split, rescaled so the sites sum to the jit
+      total: measured end-to-end + measured attribution, both on the host.
+    * ``hlo_profile=<text>`` — an XLA ``--xla_hlo_profile`` log (see
+      SNIPPETS.md Snippet 1), parsed by
+      :func:`repro.core.hlo.parse_hlo_profile`; per-instruction measured
+      microseconds are attributed to operator groups through the same
+      ``classify_hlo`` path the modeled views use.
+    """
+
+    name = "measured"
+
+    def profile(self, workload: Workload,
+                hlo_profile: Optional[str] = None,
+                repeats: int = 5, attr_repeats: int = 1,
+                **opts) -> ModelProfile:
+        if hlo_profile is not None:
+            from collections import defaultdict
+
+            from .hlo import parse_hlo_profile
+            prof = parse_hlo_profile(hlo_profile)
+            op_s: Dict[tuple, float] = defaultdict(float)
+            for op in prof.ops:
+                op_s[(op.group, op.op_site)] += 1e-6 * op.usec
+            return ModelProfile(
+                name=workload.name, mode="measured_xla",
+                group_seconds=prof.group_seconds(),
+                total_seconds=1e-6 * prof.total_usec,
+                op_seconds=dict(op_s), n_ops=len(prof.ops))
+
+        fn, args = workload.build()
+        total = _wallclock(fn, *args, repeats=repeats)
+        attr = _eager_profile(fn, *args, name=workload.name,
+                              repeats=attr_repeats)
+        scale = (total / attr.total_seconds) if attr.total_seconds > 0 else 0.0
+        return ModelProfile(
+            name=workload.name, mode="measured_cpu",
+            group_seconds={g: s * scale
+                           for g, s in attr.group_seconds.items()},
+            total_seconds=total,
+            op_seconds={k: s * scale for k, s in attr.op_seconds.items()},
+            n_ops=attr.n_ops)
+
+
+class CalibratedBackend(ProfilerBackend):
+    """Eager-modeled view through a measured-correction lens.
+
+    Identical to :class:`EagerModeledBackend` except per-group times are
+    multiplied by the :class:`~repro.core.calibrate.CalibratedHardwareSpec`
+    factors (fitted measured/modeled ratios — by default from the
+    microbench suite on this host, memoized per process).
+    """
+
+    def __init__(self, cal):
+        self.cal = cal
+        self.name = f"calibrated:{cal.base.name}"
+
+    def profile(self, workload: Workload, launch_overhead_s: float = 5e-6,
+                **opts) -> ModelProfile:
+        fn, args = workload.build()
+        return _accelerated_eager_profile(
+            fn, *args, name=workload.name, hw=self.cal,
+            mode=f"calibrated_{self.cal.base.name}",
+            launch_overhead_s=launch_overhead_s,
+            record_rewrite=_compose_record_rewrites(workload), **opts)
+
+
 #: base key -> factory(param_or_None) -> ProfilerBackend
 _BACKENDS: Dict[str, Callable[[Optional[str]], ProfilerBackend]] = {}
 
@@ -405,6 +483,17 @@ def _register_builtins() -> None:
     register_backend(
         "wallclock",
         lambda p: (_no_param("wallclock", p), WallclockBackend())[1])
+    register_backend(
+        "measured",
+        lambda p: (_no_param("measured", p), MeasuredBackend())[1])
+
+    def _calibrated(p):
+        # default fit runs the microbench once per spec per process
+        from .calibrate import default_calibration
+        from .hardware import CPU_HOST
+        return CalibratedBackend(default_calibration(_hw(p, CPU_HOST).name))
+
+    register_backend("calibrated", _calibrated)
 
 
 _register_builtins()

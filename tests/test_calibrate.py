@@ -1,0 +1,149 @@
+"""Calibration layer tests: factor fitting, CalibratedHardwareSpec
+semantics, versioned save/load, and the drift metric — all on synthetic
+samples (no jit runs) so they stay fast and deterministic."""
+
+import math
+
+import pytest
+
+from repro.core import (CPU_HOST, CalibratedHardwareSpec, CalibrationError,
+                        calibrate, drift_by_group, fit_factors,
+                        load_calibration, max_abs_log2_drift,
+                        save_calibration)
+from repro.core.calibrate import CALIBRATION_VERSION
+
+
+# ---------------------------------------------------------------------------
+# fit_factors
+# ---------------------------------------------------------------------------
+
+def test_fit_factors_ratio_of_sums():
+    # pooled per group: activation (2+6)/(1+2)=8/3, not mean-of-ratios 2.5
+    samples = [("activation", 2.0, 1.0), ("activation", 6.0, 2.0),
+               ("normalization", 1.0, 4.0)]
+    f = fit_factors(samples)
+    assert f["activation"] == pytest.approx(8.0 / 3.0)
+    assert f["normalization"] == pytest.approx(0.25)
+
+
+def test_fit_factors_skips_zero_modeled_groups():
+    assert fit_factors([("weird", 1.0, 0.0)]) == {}
+    assert "weird" not in fit_factors([("weird", 1.0, 0.0),
+                                       ("activation", 1.0, 1.0)])
+
+
+def test_roundtrip_against_spec_synthesized_profile():
+    # A profile synthesized from the spec's own model must calibrate to
+    # factors of exactly 1.0 — the no-op fixed point.
+    hw = CPU_HOST
+    samples = []
+    for g, flops, nbytes in [("activation", 1e9, 4e8),
+                             ("normalization", 2e8, 6e8),
+                             ("elementwise", 0.0, 1e9),
+                             ("gemm", 5e10, 2e8)]:
+        t = hw.group_time(g, flops, nbytes)
+        samples.append((g, t, t))
+    cal = calibrate(hw, samples, source="synthetic")
+    assert len(cal.factors) == 4
+    for _, factor in cal.factors:
+        assert factor == pytest.approx(1.0)
+    # and the calibrated spec then reproduces the base model exactly
+    assert cal.group_time("activation", 1e9, 4e8) == pytest.approx(
+        hw.group_time("activation", 1e9, 4e8))
+
+
+def test_known_factor_recovered():
+    hw = CPU_HOST
+    t = hw.group_time("activation", 1e9, 4e8)
+    cal = calibrate(hw, [("activation", 3.0 * t, t)])
+    assert cal.factor("activation") == pytest.approx(3.0)
+
+
+def test_calibrate_rejects_unusable_samples():
+    with pytest.raises(CalibrationError):
+        calibrate(CPU_HOST, [("activation", 1.0, 0.0)])
+    with pytest.raises(CalibrationError):
+        calibrate(CPU_HOST, [])
+
+
+# ---------------------------------------------------------------------------
+# CalibratedHardwareSpec
+# ---------------------------------------------------------------------------
+
+def test_calibrated_spec_applies_factor():
+    cal = CalibratedHardwareSpec(base=CPU_HOST,
+                                 factors=(("activation", 2.0),))
+    flops, nbytes = 1e12, 1e12  # large enough that the roofline dominates
+    assert cal.group_time("activation", flops, nbytes) == pytest.approx(
+        2.0 * CPU_HOST.group_time("activation", flops, nbytes))
+    assert cal.group_mem_time("activation", nbytes) == pytest.approx(
+        2.0 * CPU_HOST.group_mem_time("activation", nbytes))
+
+
+def test_unfitted_group_falls_back_to_identity():
+    cal = CalibratedHardwareSpec(base=CPU_HOST,
+                                 factors=(("activation", 2.0),))
+    assert cal.factor("reduction") == 1.0
+    assert cal.group_time("reduction", 1e12, 1e12) == pytest.approx(
+        CPU_HOST.group_time("reduction", 1e12, 1e12))
+
+
+def test_calibrated_spec_name_suffix():
+    cal = CalibratedHardwareSpec(base=CPU_HOST, factors=())
+    assert cal.name == "cpu+cal"
+
+
+# ---------------------------------------------------------------------------
+# Save / load
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip(tmp_path):
+    cal = calibrate(CPU_HOST, [("activation", 2.0, 1.0),
+                               ("normalization", 0.5, 1.0)],
+                    source="test")
+    path = str(tmp_path / "cpu.cal.json")
+    save_calibration(cal, path)
+    loaded = load_calibration(path)
+    assert loaded.base.name == "cpu"
+    assert loaded.factors == cal.factors
+    assert loaded.source == "test"
+    assert loaded.version == CALIBRATION_VERSION
+
+
+def test_version_mismatch_raises():
+    with pytest.raises(CalibrationError, match="version"):
+        CalibratedHardwareSpec.from_dict(
+            {"version": CALIBRATION_VERSION + 1, "base": "cpu",
+             "factors": {}})
+    with pytest.raises(CalibrationError, match="version"):
+        CalibratedHardwareSpec.from_dict({"base": "cpu", "factors": {}})
+
+
+# ---------------------------------------------------------------------------
+# Drift
+# ---------------------------------------------------------------------------
+
+def test_drift_by_group_ratios():
+    drift = drift_by_group({"gemm": 2.0, "activation": 1.0},
+                           {"gemm": 1.0, "activation": 4.0, "ctrl": 0.0})
+    assert drift == {"gemm": 2.0, "activation": 0.25}  # ctrl omitted
+
+
+def test_drift_missing_measured_group_is_zero_ratio():
+    drift = drift_by_group({}, {"gemm": 1.0})
+    assert drift == {"gemm": 0.0}
+    # zero ratios can't be log-scored; they are ignored, not infinite
+    assert max_abs_log2_drift(drift) == 0.0
+
+
+def test_max_abs_log2_drift_symmetric():
+    assert max_abs_log2_drift({"a": 4.0}) == pytest.approx(2.0)
+    assert max_abs_log2_drift({"a": 0.25}) == pytest.approx(2.0)
+    assert max_abs_log2_drift({"a": 1.0}) == 0.0
+    assert max_abs_log2_drift({}) == 0.0
+
+
+def test_perfect_model_has_zero_drift():
+    groups = {"gemm": 1e-3, "activation": 2e-4}
+    assert max_abs_log2_drift(drift_by_group(groups, dict(groups))) == 0.0
+    assert not math.isnan(max_abs_log2_drift(drift_by_group(groups, groups)))

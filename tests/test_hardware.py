@@ -1,0 +1,162 @@
+"""Hardware platform matrix tests: registry errors, the per-OpGroup
+efficiency model, the five-spec sweep contract, and the platforms-section
+invariant checker on synthetic rows."""
+
+import pytest
+
+from repro.core.hardware import (ANY_GROUP, BY_NAME, CPU_HOST,
+                                 MEMBOUND_DIMM, NPU_RYZEN, HardwareSpec,
+                                 get_hardware, list_hardware)
+from repro.bench.schema import (PLATFORM_NPU, PLATFORM_SWEEP,
+                                check_platforms_invariant)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_unknown_hardware_lists_known_platforms():
+    with pytest.raises(KeyError) as ei:
+        get_hardware("h100")
+    msg = str(ei.value)
+    assert "h100" in msg
+    for name in ("tpu_v5e", "a100", "cpu", "npu_ryzen", "membound_dimm"):
+        assert name in msg
+
+
+def test_registry_has_five_platforms():
+    assert set(BY_NAME) == {"tpu_v5e", "a100", "cpu", "npu_ryzen",
+                            "membound_dimm"}
+    assert list_hardware() == sorted(BY_NAME)
+    for name, spec in BY_NAME.items():
+        assert spec.name == name
+        assert spec.provenance  # every spec documents its constants
+
+
+def test_platform_sweep_is_registered():
+    assert set(PLATFORM_SWEEP) <= set(BY_NAME)
+    assert PLATFORM_NPU in PLATFORM_SWEEP
+
+
+# ---------------------------------------------------------------------------
+# Per-OpGroup efficiency
+# ---------------------------------------------------------------------------
+
+TABLED = HardwareSpec(
+    name="tabled", peak_flops_bf16=1e12, peak_flops_f32=1e12,
+    hbm_bw=1e11, link_bw=1e9, hbm_bytes=1e9,
+    group_efficiency=((ANY_GROUP, 0.5, 0.25), ("gemm", 1.0, 1.0)))
+
+
+def test_exact_entry_beats_wildcard():
+    # gemm at (1.0, 1.0): identical to the plain roofline
+    assert TABLED.group_time("gemm", 1e9, 1e6) == pytest.approx(
+        TABLED.roofline_time(1e9, 1e6))
+
+
+def test_wildcard_applies_to_unnamed_groups():
+    # flops term 1e9/1e12/0.5 = 2e-3; mem term 1e6/1e11/0.25 = 4e-5
+    assert TABLED.group_time("activation", 1e9, 1e6) == pytest.approx(2e-3)
+    assert TABLED.group_mem_time("activation", 1e6) == pytest.approx(4e-5)
+
+
+def test_no_table_means_identity():
+    for g in ("gemm", "activation", "normalization", "anything"):
+        assert CPU_HOST.group_time(g, 1e9, 1e6) == \
+            CPU_HOST.roofline_time(1e9, 1e6)
+        assert MEMBOUND_DIMM.group_time(g, 1e9, 1e6) == \
+            MEMBOUND_DIMM.roofline_time(1e9, 1e6)
+
+
+def test_npu_point_shape():
+    # GEMM rides the dedicated engine at full rate...
+    assert NPU_RYZEN.group_time("gemm", 1e12, 1e6) == pytest.approx(
+        NPU_RYZEN.roofline_time(1e12, 1e6))
+    # ...while NonGEMM work pays the weak scalar/vector path: same bytes
+    # cost 1/0.02 = 50x more than the nominal streaming bandwidth says.
+    nbytes = 1e9
+    assert NPU_RYZEN.group_mem_time("activation", nbytes) == pytest.approx(
+        50.0 * NPU_RYZEN.mem_time(nbytes))
+
+
+# ---------------------------------------------------------------------------
+# check_platforms_invariant on synthetic rows
+# ---------------------------------------------------------------------------
+
+def _modeled(case, platform, gemm_s, share):
+    return {"case": case, "platform": platform, "kind": "modeled",
+            "gemm_s": gemm_s, "nongemm_frac": share}
+
+
+def _valid_rows(case="m"):
+    # cheaper GEMM -> higher NonGEMM share, NPU cheapest and highest
+    rows = [_modeled(case, "cpu", 4.0e-2, 0.10),
+            _modeled(case, "membound_dimm", 1.2e-2, 0.20),
+            _modeled(case, "tpu_v5e", 6.0e-3, 0.30),
+            _modeled(case, "a100", 2.4e-3, 0.35),
+            _modeled(case, "npu_ryzen", 1.2e-3, 0.60)]
+    rows.append({"case": case, "platform": "cpu", "kind": "measured",
+                 "drift": {"gemm": 1.5, "activation": 0.8}})
+    rows.append({"case": case, "platform": "cpu", "kind": "calibrated",
+                 "drift": {"gemm": 1.0}})
+    return rows
+
+
+def test_valid_sweep_passes():
+    assert check_platforms_invariant(_valid_rows()) == []
+
+
+def test_missing_platform_flagged():
+    rows = [r for r in _valid_rows()
+            if r.get("platform") != "membound_dimm" or r["kind"] != "modeled"]
+    violations = check_platforms_invariant(rows)
+    assert any("missing platforms" in msg for _, msg in violations)
+
+
+def test_npu_must_be_highest():
+    rows = _valid_rows()
+    for r in rows:
+        if r.get("platform") == "npu_ryzen" and r["kind"] == "modeled":
+            r["nongemm_frac"] = 0.05
+    violations = check_platforms_invariant(rows)
+    assert any("highest NonGEMM share" in msg for _, msg in violations)
+
+
+def test_concordance_violation_flagged():
+    rows = _valid_rows()
+    for r in rows:
+        # a100's GEMM is >10% cheaper than tpu_v5e's, so its share may
+        # not drop below tpu_v5e's
+        if r.get("platform") == "a100" and r["kind"] == "modeled":
+            r["nongemm_frac"] = 0.25
+    violations = check_platforms_invariant(rows)
+    assert any("share must grow as GEMM gets cheaper" in msg
+               for _, msg in violations)
+
+
+def test_near_tie_gemm_times_carry_no_ordering_signal():
+    rows = _valid_rows()
+    for r in rows:
+        # within the 10% margin of tpu_v5e (6.0e-3): ordering not enforced
+        if r.get("platform") == "a100" and r["kind"] == "modeled":
+            r["gemm_s"] = 5.7e-3
+            r["nongemm_frac"] = 0.25
+    assert check_platforms_invariant(rows) == []
+
+
+def test_host_rows_require_drift_map():
+    rows = _valid_rows()
+    for r in rows:
+        if r["kind"] == "measured":
+            r["drift"] = {}
+    violations = check_platforms_invariant(rows)
+    assert any("drift" in msg for _, msg in violations)
+
+    rows = [r for r in _valid_rows() if r["kind"] != "calibrated"]
+    violations = check_platforms_invariant(rows)
+    assert any("no calibrated host row" in msg for _, msg in violations)
+
+
+def test_empty_rows_no_violations():
+    # an empty section is a section failure, not an invariant failure
+    assert check_platforms_invariant([]) == []

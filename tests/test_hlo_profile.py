@@ -1,0 +1,116 @@
+"""--xla_hlo_profile parser tests: timed-line extraction, [total]/[entry]
+handling, malformed-line accounting, and taxonomy classification — all on
+synthetic dumps so the assertions stay deterministic."""
+
+import pytest
+
+from repro.core.hlo import HloProfile, ProfiledOp, parse_hlo_profile
+
+# The shape XLA emits with --xla_hlo_profile: a cycles column, a usec
+# column, more ::-separated rate columns, and the instruction text last.
+# Includes the entry [total] line, a subcomputation [total] roll-up (must
+# NOT be double-counted), a zero-usec op (must be kept), and one timed
+# line whose tail is not an instruction (counted as malformed).
+SYNTH_PROFILE = """\
+Execution profile for synth_module: (1.0 GHz)
+2026-08-08 05:00:00.000000: I xla/service/service.cc:123] profile follows
+
+  1000000 cycles (100.00% 100.00sum) :: 500.0 usec (500.0 optimal) :: 2.5GFLOP/s :: 1.2GiB/s :: [total] [entry]
+   400000 cycles ( 40.00% 40.00sum) :: 200.0 usec (150.0 optimal) :: 4.1GFLOP/s :: 0.8GiB/s :: %dot.1 = f32[128,256]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+   300000 cycles ( 30.00% 70.00sum) :: 150.0 usec (90.0 optimal) :: 0.0FLOP/s :: 1.9GiB/s :: %exp.2 = f32[128,256]{1,0} exponential(%x), metadata={op_name="model/ng:normalization:softmax/exp"}
+   100000 cycles ( 10.00% 80.00sum) :: 50.0 usec (40.0 optimal) :: 0.0FLOP/s :: 2.2GiB/s :: %mul.3 = f32[128,256]{1,0} multiply(%a, %b)
+        0 cycles (  0.00% 80.00sum) :: 0.0 usec (0.0 optimal) :: 0.0FLOP/s :: 0.0GiB/s :: %red.4 = f32[128]{0} reduce(%y, %z), dimensions={1}, to_apply=%sum
+   150000 cycles ( 15.00% 15.00sum) :: 75.0 usec (75.0 optimal) :: 0.0FLOP/s :: 0.5GiB/s :: [total]
+    50000 cycles (  5.00% 85.00sum) :: 25.0 usec (25.0 optimal) :: 0.0FLOP/s :: 0.1GiB/s :: not an hlo instruction at all
+"""
+
+# --xla_hlo_profile dumps often interleave the raw module text; its
+# computation closers (`} // name`) and header lines must parse as
+# nothing — no ops, no malformed count.
+MODULE_TEXT = """\
+HloModule synth, entry_computation_layout={(f32[128,256]{1,0})->f32[128,256]{1,0}}
+
+ENTRY %main (arg: f32[128,256]) -> f32[128,256] {
+  %arg = f32[128,256]{1,0} parameter(0)
+  ROOT %y = f32[128,256]{1,0} multiply(%arg, %arg)
+} // main
+"""
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return parse_hlo_profile(SYNTH_PROFILE)
+
+
+def test_timed_ops_extracted(prof):
+    assert [op.name for op in prof.ops] == ["dot.1", "exp.2", "mul.3",
+                                            "red.4"]
+    assert [op.usec for op in prof.ops] == [200.0, 150.0, 50.0, 0.0]
+    assert prof.ops[0].cycles == 400000.0
+
+
+def test_entry_total_preferred_over_op_sum(prof):
+    # 500.0 from the "[total] [entry]" line, NOT 200+150+50+0=400 and NOT
+    # inflated by the 75.0-usec subcomputation "[total]" roll-up.
+    assert prof.entry_usec == 500.0
+    assert prof.total_usec == 500.0
+
+
+def test_total_falls_back_to_op_sum_without_entry_line():
+    text = "\n".join(line for line in SYNTH_PROFILE.splitlines()
+                     if "[entry]" not in line)
+    p = parse_hlo_profile(text)
+    assert p.entry_usec == 0.0
+    assert p.total_usec == pytest.approx(400.0)
+
+
+def test_zero_usec_op_kept(prof):
+    red = [op for op in prof.ops if op.name == "red.4"]
+    assert len(red) == 1 and red[0].usec == 0.0
+    assert "reduction" in prof.group_usec  # present even at zero time
+
+
+def test_malformed_timed_line_counted_not_raised(prof):
+    assert prof.n_malformed == 1  # the "not an hlo instruction" line
+
+
+def test_groups_via_taxonomy(prof):
+    # dot -> GEMM by opcode; exponential -> normalization via the ng: tag
+    # in metadata op_name; multiply -> elementwise by opcode fallback.
+    assert prof.group_usec["gemm"] == pytest.approx(200.0)
+    assert prof.group_usec["normalization"] == pytest.approx(150.0)
+    assert prof.group_usec["elementwise"] == pytest.approx(50.0)
+    exp = [op for op in prof.ops if op.name == "exp.2"][0]
+    assert exp.op_site == "softmax"
+    assert exp.op_name == "model/ng:normalization:softmax/exp"
+
+
+def test_group_seconds_scaled(prof):
+    gs = prof.group_seconds()
+    assert gs["gemm"] == pytest.approx(200e-6)
+
+
+def test_module_text_is_not_profile():
+    p = parse_hlo_profile(MODULE_TEXT)
+    assert p.ops == [] and p.n_malformed == 0 and p.total_usec == 0.0
+
+
+def test_module_text_interleaved_with_profile():
+    p = parse_hlo_profile(MODULE_TEXT + "\n" + SYNTH_PROFILE)
+    assert len(p.ops) == 4 and p.n_malformed == 1
+    assert p.total_usec == 500.0
+
+
+def test_log_prefixed_timed_line_found():
+    line = ("2026-08-08 05:00:01.000000: I xla/service/hlo.cc:99] "
+            "  80000 cycles ( 8.00% 8.00sum) :: 40.0 usec (40.0 optimal) "
+            ":: 0.0FLOP/s :: %t = f32[16,16]{1,0} tanh(%q)")
+    p = parse_hlo_profile(line)
+    assert len(p.ops) == 1
+    assert p.ops[0].opcode == "tanh" and p.ops[0].usec == 40.0
+
+
+def test_empty_input():
+    p = parse_hlo_profile("")
+    assert isinstance(p, HloProfile)
+    assert p.ops == [] and p.total_usec == 0.0 and p.group_usec == {}

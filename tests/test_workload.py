@@ -43,7 +43,7 @@ def tiny():
 
 def test_builtin_backends_listed():
     assert {"eager-cpu", "eager-modeled", "compiled",
-            "wallclock"} <= set(list_backends())
+            "wallclock", "measured", "calibrated"} <= set(list_backends())
 
 
 def test_unknown_backend_raises_keyerror_with_listing():
@@ -148,6 +148,41 @@ def test_fake_quant_state_restored_on_error():
     with pytest.raises(Exception):
         w.profile("eager-modeled:a100")
     assert nn.get_fake_quant() is None
+
+
+def test_measured_backend_profile(tiny):
+    p = tiny.profile("measured", repeats=2, attr_repeats=1)
+    assert p.mode == "measured_cpu"
+    assert p.total_seconds > 0
+    # the eager split attributes the full measured total across groups
+    assert sum(p.group_seconds.values()) == pytest.approx(p.total_seconds)
+    assert p.split["gemm_frac"] + p.split["nongemm_frac"] <= 1.0 + 1e-9
+
+
+def test_measured_backend_from_hlo_profile(tiny):
+    text = ("  400000 cycles ( 40.00% 40.00sum) :: 200.0 usec (x) :: "
+            "%d = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, "
+            "rhs_contracting_dims={0}\n"
+            "  100000 cycles ( 10.00% 50.00sum) :: 50.0 usec (x) :: "
+            "%m = f32[8,8]{1,0} multiply(%a, %b)\n")
+    p = tiny.profile("measured", hlo_profile=text)
+    assert p.mode == "measured_xla"
+    assert p.total_seconds == pytest.approx(250e-6)
+    assert p.group_seconds["gemm"] == pytest.approx(200e-6)
+    assert p.group_seconds["elementwise"] == pytest.approx(50e-6)
+
+
+def test_calibrated_backend_with_injected_factors(tiny):
+    from repro.core import CPU_HOST, CalibratedHardwareSpec
+    from repro.core.workload import CalibratedBackend
+
+    base_p = tiny.profile("eager-modeled:cpu")
+    cal = CalibratedHardwareSpec(base=CPU_HOST, factors=(("gemm", 1.0),))
+    p = CalibratedBackend(cal).profile(tiny)
+    assert p.mode == "calibrated_cpu"
+    # identity factors reproduce the uncalibrated model exactly
+    assert p.total_seconds == pytest.approx(base_p.total_seconds)
+    assert p.group_seconds == pytest.approx(base_p.group_seconds)
 
 
 def test_wallclock_backend_profile(tiny):
