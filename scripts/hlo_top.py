@@ -1,15 +1,25 @@
-"""Top byte/flop contributors of a partitioned HLO dump (dev/perf tool).
+#!/usr/bin/env python
+"""Top contributors of an HLO artifact (dev/perf tool).
 
-Usage: python scripts/hlo_top.py <dump.txt> [N]
+Two input kinds, auto-detected:
+
+* a **partitioned HLO module dump** (``--xla_dump_to`` text) — analytic
+  top byte/FLOP contributors via ``hlo.analyze_partitioned``;
+* an ``--xla_hlo_profile`` **log** — measured top ops by usec via the
+  tolerant ``hlo.parse_hlo_profile`` parser (PR 6), which skips log
+  preambles and ``[total]`` roll-up lines instead of mis-parsing them.
+
+Usage: python scripts/hlo_top.py [--profile|--dump] <file.txt> [-n N]
 """
+import argparse
 import sys
 
 from repro.core import hlo as H
 
 
-def main(path: str, n: int = 25) -> None:
+def top_dump(text: str, n: int) -> int:
     detail: list = []
-    out = H.analyze_partitioned(open(path).read(), detail=detail)
+    out = H.analyze_partitioned(text, detail=detail)
     detail.sort(key=lambda r: -r[0])
     print(f"TOTAL {out.bytes/1e9:.1f} GB  {out.flops/1e12:.2f} TF  "
           f"coll {out.collective_bytes/1e9:.1f} GB")
@@ -17,7 +27,54 @@ def main(path: str, n: int = 25) -> None:
         nb, fl, comp, name, op, rt, op_name = r
         print(f"{nb/1e9:9.2f} GB {fl/1e9:9.2f} GF  {comp[:22]:<22} "
               f"{name[:26]:<26} {op:<10} {rt[:28]:<28} {op_name[-60:]}")
+    return 0
+
+
+def top_profile(text: str, n: int) -> int:
+    prof = H.parse_hlo_profile(text)
+    if not prof.ops:
+        print("no timed ops found (is this an --xla_hlo_profile log?)",
+              file=sys.stderr)
+        return 1
+    total = prof.total_usec or 1.0
+    print(f"TOTAL {prof.total_usec/1e3:.3f} ms over {len(prof.ops)} "
+          f"timed op(s)"
+          + (f"  ({prof.n_malformed} malformed line(s) skipped)"
+             if prof.n_malformed else ""))
+    for g, us in sorted(prof.group_usec.items(), key=lambda kv: -kv[1]):
+        print(f"  {g:<14} {us/1e3:9.3f} ms  {100.0 * us / total:5.1f}%")
+    for op in sorted(prof.ops, key=lambda o: -o.usec)[:n]:
+        print(f"{op.usec:10.1f} us  {op.group:<14} {op.opcode:<20} "
+              f"{op.name[:28]:<28} {op.op_name[-50:]}")
+    return 0
+
+
+def looks_like_profile(text: str) -> bool:
+    """True when the input carries --xla_hlo_profile timed lines."""
+    return any(H._PROFILE_LINE_RE.search(line)
+               for line in text.splitlines())
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("path", help="HLO dump or --xla_hlo_profile log")
+    p.add_argument("n", nargs="?", type=int, default=25,
+                   help="rows to print (default 25)")
+    p.add_argument("-n", dest="n_flag", type=int, default=None,
+                   help="rows to print (overrides the positional)")
+    kind = p.add_mutually_exclusive_group()
+    kind.add_argument("--profile", action="store_true",
+                      help="force --xla_hlo_profile log parsing")
+    kind.add_argument("--dump", action="store_true",
+                      help="force partitioned-module dump parsing")
+    args = p.parse_args(argv)
+    n = args.n_flag if args.n_flag is not None else args.n
+    with open(args.path) as fh:
+        text = fh.read()
+    if args.profile or (not args.dump and looks_like_profile(text)):
+        return top_profile(text, n)
+    return top_dump(text, n)
 
 
 if __name__ == "__main__":
-    main(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 25)
+    sys.exit(main())

@@ -12,7 +12,6 @@ import sys
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced
-from repro.models import (init_lm, lm_forward, lm_loss, init_lm_cache,
-                          lm_prefill, lm_decode)
+from repro.models import (init_lm, lm_forward, lm_loss, lm_prefill,
+                          lm_decode)
 
 
 def check_arch(a: str) -> dict:

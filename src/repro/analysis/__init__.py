@@ -1,0 +1,32 @@
+"""nglint — rule-based static analysis over the repro's captured artifacts.
+
+The paper's method attributes latency to a fixed operator taxonomy, so
+every silent taxonomy hole, missed fusion, or estimator gap corrupts the
+headline numbers. This package is the correctness tool for that surface:
+a rule registry (:mod:`repro.analysis.rules`) plus eight built-in rules
+(:mod:`repro.analysis.builtin`, NG001–NG008) that walk the captured
+:class:`~repro.core.graph.OpRecord` stream, the fusion-rewritten graph,
+and the Pallas kernel specs. Findings gate CI against a committed
+baseline (:mod:`repro.analysis.baseline`) the same way
+``repro.bench.compare`` gates the bench artifact.
+
+Entry point: ``python -m repro.analyze [--all|workload-ids] [--json]
+[--baseline benchmarks/analysis_baseline.json]`` (see
+:mod:`repro.analysis.cli`; ``python -m repro.analysis`` is an alias).
+"""
+
+from . import builtin  # noqa: F401  (registers the NG rules on import)
+from .baseline import (AnalysisBaseline, BaselineError, build_baseline,
+                       gate_findings, load_baseline, save_baseline)
+from .builtin import rule_catalog
+from .cli import analyze, build_context, main, render_summary_markdown
+from .rules import (AnalysisContext, Finding, Rule, all_rules, get_rule,
+                    register_rule, rule, run_rules, run_static_rules)
+
+__all__ = [
+    "AnalysisBaseline", "AnalysisContext", "BaselineError", "Finding",
+    "Rule", "all_rules", "analyze", "build_baseline", "build_context",
+    "gate_findings", "get_rule", "load_baseline", "main", "register_rule",
+    "render_summary_markdown", "rule", "rule_catalog", "run_rules",
+    "run_static_rules", "save_baseline",
+]

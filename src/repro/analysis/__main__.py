@@ -1,0 +1,8 @@
+"""``python -m repro.analysis`` — alias for ``python -m repro.analyze``."""
+
+import sys
+
+from .cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

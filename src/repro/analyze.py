@@ -1,0 +1,13 @@
+"""``python -m repro.analyze`` — the nglint static-analysis entry point.
+
+Thin shim over :mod:`repro.analysis.cli` so the command reads like the
+other repro CLIs (``python -m repro.bench``, ``python -m
+repro.bench.compare``).
+"""
+
+import sys
+
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,6 @@ family, block pattern, norm/ffn/attention flavor — tiny dims).
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Dict
 

@@ -280,6 +280,48 @@ def _match(runs: List[_SiteRun], i: int,
     return window
 
 
+def find_fusable_chains(records: Sequence[OpRecord],
+                        patterns: Optional[Sequence[FusionPattern]] = None
+                        ) -> List[Tuple[FusionPattern, List[OpRecord]]]:
+    """Enumerate every :data:`FUSION_PATTERNS` match in an op stream.
+
+    Read-only twin of :func:`fuse_records` — same site-run grouping, same
+    ``_match`` semantics (scope-prefix / trip-count / dataflow guards),
+    greedy left-to-right with the same pattern precedence — but it only
+    *reports* ``(pattern, chain_records)`` pairs instead of rewriting.
+    On a correctly fused stream this returns ``[]``: anything it finds in
+    a post-rewrite graph is a chain the fusion pass left on the table
+    (nglint rule NG002).
+    """
+    patterns = FUSION_PATTERNS if patterns is None else tuple(patterns)
+    runs = _site_runs(list(records))
+    found: List[Tuple[FusionPattern, List[OpRecord]]] = []
+    i = 0
+    while i < len(runs):
+        run = runs[i]
+        if run.group == OpGroup.FUSED and len(run.records) > 1:
+            # executed-fused site not yet collapsed to one launch
+            found.append((FusionPattern(run.op_site,
+                                        ((OpGroup.FUSED, run.op_site),),
+                                        min_records=2),
+                          list(run.records)))
+            i += 1
+            continue
+        matched = None
+        for p in patterns:
+            window = _match(runs, i, p)
+            if window is not None:
+                matched = (p, window)
+                break
+        if matched is None:
+            i += 1
+            continue
+        p, window = matched
+        found.append((p, [r for w in window for r in w.records]))
+        i += len(window)
+    return found
+
+
 def fused_bytes_model(records: Sequence[OpRecord],
                       live: Optional[Sequence[bool]] = None) -> float:
     """Kernel-boundary IO of a fused chain (analytic, deterministic).
@@ -312,7 +354,10 @@ def _fused_record(name: str, window: List[_SiteRun], index: int,
                   live: Optional[Sequence[bool]] = None) -> OpRecord:
     recs = [r for run in window for r in run.records]
     first, last = recs[0], recs[-1]
-    tag = scope_tag(OpGroup.FUSED, name)
+    # the /c<index> marker mirrors the execution path's per-invocation
+    # scope marker: adjacent same-pattern launches stay distinct runs, so
+    # re-grouping a rewritten stream never merges two separate launches
+    tag = scope_tag(OpGroup.FUSED, name) + f"/c{index}"
     return OpRecord(
         index=index, prim=FUSED_PRIM, group=OpGroup.FUSED, op_site=name,
         scope=(window[0].prefix + tag), in_shapes=first.in_shapes,

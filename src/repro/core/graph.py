@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Iterable, Optional, Sequence
+from typing import Any, Callable, Iterable, Sequence
 
 import jax
 import numpy as np
@@ -117,6 +117,10 @@ def estimate_flops(prim: str, params: dict, in_shapes, out_shapes) -> float:
     g = classify_primitive(prim)
     if g in (OpGroup.ELEMENTWISE, OpGroup.NORMALIZATION, OpGroup.ACTIVATION):
         return float(_numel(out_shapes[0])) if out_shapes else 0.0
+    if g == OpGroup.REDUCTION:
+        # argmax / select_and_scatter_add / reduce_window variants that don't
+        # spell "reduce_": every input element is touched at least once
+        return float(_numel(in_shapes[0])) if in_shapes else 0.0
     return 0.0
 
 

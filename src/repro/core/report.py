@@ -11,7 +11,7 @@ import io
 from typing import Iterable, Sequence
 
 from .profiler import ModelProfile
-from .taxonomy import NONGEMM_GROUPS, OpGroup
+from .taxonomy import OpGroup
 
 GROUP_ORDER = [
     OpGroup.GEMM, OpGroup.NORMALIZATION, OpGroup.ACTIVATION, OpGroup.MEMORY,

@@ -51,7 +51,8 @@ from __future__ import annotations
 
 import enum
 import re
-from typing import Optional, Tuple
+import warnings
+from typing import Dict, Optional, Tuple
 
 
 class OpGroup(str, enum.Enum):
@@ -144,6 +145,9 @@ _reg(
     "scatter-add", "scatter_add", "scatter_mul", "scatter_min", "scatter_max",
     "pad", "squeeze", "rev", "copy", "convert_element_type",
     "bitcast_convert_type", "iota", "split", "expand_dims",
+    # jax's identity marker primitive (jax.nn wraps e.g. softmax/einsum
+    # results in name_p); compiles away like copy does
+    "name",
 )
 _reg(
     OpGroup.ELEMENTWISE,
@@ -192,8 +196,44 @@ INLINE_PRIMS = frozenset(
 )
 
 
+#: Primitives that fell through to ``OpGroup.OTHER`` because no ``_reg``
+#: entry covers them, with the number of times each was classified. PR 5
+#: shipped pooling misbinned as OTHER because this fallback was silent;
+#: nglint rule NG001 and the warn-once below make it observable.
+UNKNOWN_PRIMS: Dict[str, int] = {}
+
+_WARNED_UNKNOWN: set = set()
+
+
+def is_known_primitive(prim_name: str) -> bool:
+    """True if the primitive has an explicit ``_PRIM_GROUPS`` entry."""
+    return prim_name in _PRIM_GROUPS
+
+
+def lookup_primitive(prim_name: str) -> Optional[OpGroup]:
+    """``_PRIM_GROUPS`` lookup *without* the unknown-primitive accounting.
+
+    For introspection (nglint) — unlike :func:`classify_primitive` it
+    neither records the miss in :data:`UNKNOWN_PRIMS` nor warns.
+    """
+    return _PRIM_GROUPS.get(prim_name)
+
+
 def classify_primitive(prim_name: str) -> OpGroup:
-    return _PRIM_GROUPS.get(prim_name, OpGroup.OTHER)
+    group = _PRIM_GROUPS.get(prim_name)
+    if group is None:
+        UNKNOWN_PRIMS[prim_name] = UNKNOWN_PRIMS.get(prim_name, 0) + 1
+        if prim_name not in _WARNED_UNKNOWN:
+            _WARNED_UNKNOWN.add(prim_name)
+            warnings.warn(
+                f"primitive {prim_name!r} is not registered in the operator "
+                "taxonomy and was binned to OpGroup.OTHER; add it to "
+                "_PRIM_GROUPS in repro/core/taxonomy.py "
+                "(nglint NG001 flags these records)",
+                stacklevel=2,
+            )
+        return OpGroup.OTHER
+    return group
 
 
 def classify(prim_name: str, scope_path: str = "") -> Tuple[OpGroup, str]:

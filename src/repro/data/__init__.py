@@ -15,7 +15,6 @@ paper-reproduction profiles to see a realistic logit distribution.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +68,6 @@ def make_batch(cfg: DataConfig, step: int) -> dict:
     labels = tokens[:, 1:].astype(jnp.int32)
     batch = {"inputs": inputs, "labels": labels}
     if cfg.embed_dim:
-        k_emb = jax.random.fold_in(key, 7)
         table = jax.random.normal(
             jax.random.PRNGKey(cfg.seed + 2), (cfg.vocab_size, cfg.embed_dim),
             jnp.float32)

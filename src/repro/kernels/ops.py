@@ -21,9 +21,10 @@ match the ``repro.nn`` call sites so ``nn.set_backend("pallas"/
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
-from typing import Optional
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 
@@ -97,3 +98,54 @@ softmax_xent = _autojit(_xent.softmax_xent,
                         static=("block_rows", "block_vocab", "interpret"))
 nms = _autojit(_nms.nms,
                static=("iou_threshold", "score_threshold", "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Static kernel metadata (nglint NG005)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Static description of one public kernel entry point.
+
+    ``block_defaults`` mirrors the kernel's block-shape keyword defaults;
+    ``handles_remainder`` records how a partial last block is made legal:
+
+    * ``"pad"``  — operands are padded up to a block multiple before the
+      ``pallas_call`` (``_pad_rows`` in norms/rope, row+col pad in swiglu);
+    * ``"clamp"`` — the block shape is clamped to the operand dim
+      (``min(block, dim)`` in flash_attention / softmax_xent);
+    * ``None``  — neither: block shapes MUST divide the operand dims, and
+      nglint rule NG005 flags harvested shapes that don't.
+    """
+
+    name: str
+    fn: Callable
+    block_defaults: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
+    handles_remainder: Optional[str] = "pad"
+
+
+def _spec(name: str, fn: Callable, remainder: Optional[str],
+          **blocks: int) -> Tuple[str, KernelSpec]:
+    return name, KernelSpec(name=name, fn=fn, block_defaults=dict(blocks),
+                            handles_remainder=remainder)
+
+
+#: every public kernel, keyed by the name ``FUSION_PATTERNS`` entries use
+#: in their ``kernel=`` field — nglint NG005 cross-checks the two tables
+KERNEL_SPECS: Dict[str, KernelSpec] = dict((
+    _spec("rms_norm", rms_norm, "pad", block_rows=8),
+    _spec("fused_add_rms_norm", fused_add_rms_norm, "pad", block_rows=8),
+    _spec("dequant_add_rms_norm", dequant_add_rms_norm, "pad", block_rows=8),
+    _spec("layer_norm", layer_norm, "pad", block_rows=8),
+    _spec("fused_add_layer_norm", fused_add_layer_norm, "pad", block_rows=8),
+    _spec("fused_rope", fused_rope, "pad", block_rows=8),
+    _spec("swiglu", swiglu, "pad", block_rows=256, block_cols=512),
+    _spec("geglu", geglu, "pad", block_rows=256, block_cols=512),
+    _spec("flash_attention", flash_attention, "clamp",
+          block_q=128, block_k=128),
+    _spec("softmax_xent", softmax_xent, "clamp",
+          block_rows=8, block_vocab=2048),
+    _spec("nms", nms, "pad"),
+))

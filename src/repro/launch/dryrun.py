@@ -29,14 +29,12 @@ os.environ["XLA_FLAGS"] += (
 import argparse
 import glob
 import json
-import shutil
 import subprocess
 import sys
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding

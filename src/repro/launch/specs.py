@@ -7,17 +7,14 @@ token + the seq_len-deep cache). Nothing here allocates device memory.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import sharding
 from repro.core.roofline import attention_flops
 from repro.models import init_lm, init_lm_cache
-from repro.models.common import ModelConfig, SHAPES, ShapeSpec
+from repro.models.common import ModelConfig, ShapeSpec
 from repro.optim import OptimizerConfig, init_opt_state
 from repro.runtime import TrainState, pick_microbatches
 

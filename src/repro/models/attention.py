@@ -88,8 +88,6 @@ def chunked_attention(q, k, v, *, causal: bool = True,
     ks = kf.reshape(b, nk, ck, hkv, dh).transpose(1, 0, 2, 3, 4)
     vs = vf.reshape(b, nk, ck, hkv, dv).transpose(1, 0, 2, 3, 4)
 
-    kv_pos = jnp.arange(nk * ck)  # absolute kv positions (0-based in k)
-
     def kv_step(qi, q_chunk, carry, kj):
         m, l, acc = carry
         k_chunk = ks[kj]

@@ -127,7 +127,6 @@ class ModelConfig:
         """(scanned pattern, remainder kinds). pattern repeats n_rep times."""
         p = self.block_pattern
         n_rep = self.n_layers // len(p)
-        rem = self.n_layers - n_rep * len(p)
         full = (p * (n_rep + 1))[: self.n_layers]
         return full[: n_rep * len(p)], full[n_rep * len(p):]
 

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -31,11 +31,10 @@ from __future__ import annotations
 import contextlib
 import functools
 import itertools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.taxonomy import OpGroup, scope_tag
 

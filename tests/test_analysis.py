@@ -1,0 +1,428 @@
+"""nglint (repro.analysis): rule registry, the built-in rules, the gate.
+
+Each built-in rule gets at least one synthetic positive (the defect it
+exists to catch, planted deliberately) and one negative (clean stream →
+no finding). NG001/NG002 follow the acceptance scenarios from the issue:
+a synthetically unregistered primitive, and a fusion pass run with a
+deliberately narrowed pattern subset then analyzed against the full set.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro import nn
+from repro.analysis import cli as A_cli
+from repro.analysis.baseline import (AnalysisBaseline, BaselineError,
+                                     WorkloadBaseline, build_baseline,
+                                     gate_findings, load_baseline,
+                                     save_baseline)
+from repro.analysis.rules import (AnalysisContext, Finding, Rule, all_rules,
+                                  get_rule, register_rule, run_rules,
+                                  run_static_rules)
+from repro.core import fusion as F
+from repro.core.graph import OpRecord, capture
+from repro.core.taxonomy import OpGroup, scope_tag
+from repro.core.workload import Workload
+
+
+def _rec(index, prim, group, op_site, scope="", *, out_shapes=((4, 8),),
+         out_dtypes=("float32",), in_shapes=((4, 8),),
+         in_dtypes=("float32",), flops=32.0, nbytes=256.0,
+         in_vids=(), out_vids=()):
+    return OpRecord(index=index, prim=prim, group=group, op_site=op_site,
+                    scope=scope, in_shapes=in_shapes, in_dtypes=in_dtypes,
+                    out_shapes=out_shapes, out_dtypes=out_dtypes,
+                    flops=flops, bytes_accessed=nbytes,
+                    in_var_ids=tuple(in_vids), out_var_ids=tuple(out_vids))
+
+
+def _ctx(records, rewritten=None, fused=False, **kw):
+    return AnalysisContext(
+        workload=Workload(name="synthetic", arch="synthetic"),
+        variant="fused" if fused else "fp32",
+        records=list(records),
+        rewritten=list(records if rewritten is None else rewritten),
+        fused=fused, **kw)
+
+
+def _run(rule_id, ctx):
+    return run_rules(ctx, rules=[get_rule(rule_id)])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_all_eight_builtin_rules_registered():
+    ids = [r.id for r in all_rules()]
+    assert [f"NG{i:03d}" for i in range(1, 9)] == ids
+
+
+def test_register_rule_rejects_duplicate_id():
+    with pytest.raises(ValueError, match="duplicate"):
+        register_rule(Rule(id="NG001", title="x", severity="error",
+                           check=lambda ctx: []))
+
+
+def test_rule_validates_severity_and_scope():
+    with pytest.raises(ValueError, match="severity"):
+        Rule(id="NGX", title="x", severity="fatal", check=lambda c: [])
+    with pytest.raises(ValueError, match="scope"):
+        Rule(id="NGX", title="x", severity="error", check=lambda c: [],
+             scope="galactic")
+
+
+def test_crashing_rule_becomes_error_finding_not_crash():
+    def boom(ctx):
+        raise RuntimeError("kaboom")
+
+    bad = Rule(id="NG999", title="crash test", severity="info", check=boom)
+    out = run_rules(_ctx([]), rules=[bad])
+    assert len(out) == 1
+    assert out[0].severity == "error"
+    assert "kaboom" in out[0].message
+
+
+def test_finding_roundtrips_through_dict():
+    f = Finding(rule="NG001", severity="error", workload="w/fp32",
+                where="x", message="m", fix_hint="h")
+    assert Finding.from_dict(f.to_dict()) == f
+
+
+# ---------------------------------------------------------------------------
+# NG001 — unknown primitive binned to OTHER  (acceptance scenario 1)
+# ---------------------------------------------------------------------------
+
+def test_ng001_flags_synthetically_unregistered_primitive():
+    recs = [_rec(0, "frobnicate_widget", OpGroup.OTHER, "frobnicate_widget"),
+            _rec(1, "frobnicate_widget", OpGroup.OTHER, "frobnicate_widget")]
+    out = _run("NG001", _ctx(recs))
+    assert len(out) == 1  # deduped per primitive
+    assert out[0].rule == "NG001" and out[0].severity == "error"
+    assert "frobnicate_widget" in out[0].message
+
+
+def test_ng001_accepts_registered_and_deliberately_tagged_other():
+    tagged_other = _rec(0, "weird_prim", OpGroup.OTHER, "custom",
+                        scope=scope_tag(OpGroup.OTHER, "custom"))
+    known = _rec(1, "add", OpGroup.ELEMENTWISE, "add")
+    assert _run("NG001", _ctx([tagged_other, known])) == []
+
+
+# ---------------------------------------------------------------------------
+# NG002 — skipped FUSION_PATTERNS match  (acceptance scenario 2)
+# ---------------------------------------------------------------------------
+
+def _captured_add_norm_block():
+    scale = jnp.ones((32,), jnp.float32)
+    x = jnp.ones((4, 32), jnp.float32)
+    res = jnp.ones((4, 32), jnp.float32)
+
+    def block(x, res, scale):
+        return nn.rms_norm(nn.residual_add(x, res), scale)
+
+    return capture(block, x, res, scale)
+
+
+def test_ng002_catches_deliberately_skipped_pattern_match():
+    records = _captured_add_norm_block()
+    # fuse with a deliberately narrowed subset: drop every pattern that
+    # could claim the residual_add -> rms_norm chain
+    subset = tuple(p for p in F.FUSION_PATTERNS
+                   if p.name not in ("fused_add_rms_norm", "fused_rms_norm"))
+    partially_fused, _ = F.fuse_records(records, patterns=subset)
+    out = _run("NG002", _ctx(records, rewritten=partially_fused, fused=True))
+    assert out, "NG002 missed the add->rms_norm chain the subset skipped"
+    assert {f.rule for f in out} == {"NG002"}
+    assert any("fused_add_rms_norm" in f.where for f in out)
+
+
+def test_ng002_clean_on_fully_fused_stream():
+    records = _captured_add_norm_block()
+    fused, report = F.fuse_records(records)
+    assert report.n_fused >= 1  # the chain really was fusable
+    assert _run("NG002", _ctx(records, rewritten=fused, fused=True)) == []
+
+
+def test_ng002_silent_on_unfused_variants():
+    records = _captured_add_norm_block()
+    assert _run("NG002", _ctx(records, fused=False)) == []
+
+
+# ---------------------------------------------------------------------------
+# NG003 — f32 leak out of a low-precision site
+# ---------------------------------------------------------------------------
+
+def test_ng003_flags_f32_leak_from_low_precision_site():
+    site = scope_tag(OpGroup.INTERPOLATION, "interpolate_bilinear")
+    prod = _rec(0, "mul", OpGroup.INTERPOLATION, "interpolate_bilinear",
+                scope=site, in_dtypes=("bfloat16", "bfloat16"),
+                out_dtypes=("float32",), out_vids=(101,))
+    cons = _rec(1, "add", OpGroup.ELEMENTWISE, "residual_add",
+                scope=scope_tag(OpGroup.ELEMENTWISE, "residual_add"),
+                in_vids=(101,))
+    out = _run("NG003", _ctx([prod, cons]))
+    assert len(out) == 1
+    assert "interpolate_bilinear" in out[0].where
+
+
+def test_ng003_clean_when_site_casts_back():
+    site = scope_tag(OpGroup.INTERPOLATION, "interpolate_bilinear")
+    prod = _rec(0, "mul", OpGroup.INTERPOLATION, "interpolate_bilinear",
+                scope=site, in_dtypes=("bfloat16",),
+                out_dtypes=("bfloat16",), out_vids=(101,))
+    cons = _rec(1, "add", OpGroup.ELEMENTWISE, "residual_add",
+                in_vids=(101,))
+    assert _run("NG003", _ctx([prod, cons])) == []
+
+
+# ---------------------------------------------------------------------------
+# NG004 — cancelling quantize->dequantize
+# ---------------------------------------------------------------------------
+
+def _qdq_records(consumer_group, consumer_site):
+    q_scope = scope_tag(OpGroup.QUANT, "quantize")
+    d_scope = scope_tag(OpGroup.QUANT, "dequantize")
+    recs = [
+        _rec(0, "round", OpGroup.QUANT, "quantize", scope=q_scope,
+             out_vids=(1,)),
+        _rec(1, "mul", OpGroup.QUANT, "dequantize", scope=d_scope,
+             in_vids=(1,), out_vids=(2,)),
+    ]
+    if consumer_group is not None:
+        recs.append(_rec(2, "dot_general" if consumer_group == OpGroup.GEMM
+                         else "add", consumer_group, consumer_site,
+                         in_vids=(2,)))
+    return recs
+
+
+def test_ng004_flags_dequantize_feeding_no_gemm():
+    out = _run("NG004", _ctx(_qdq_records(OpGroup.ELEMENTWISE, "add")))
+    assert len(out) == 1
+    assert "non-GEMM" in out[0].message
+
+
+def test_ng004_flags_dead_dequantize():
+    out = _run("NG004", _ctx(_qdq_records(None, None)))
+    assert len(out) == 1
+    assert "never consumed" in out[0].message
+
+
+def test_ng004_clean_when_dequantize_feeds_gemm():
+    assert _run("NG004", _ctx(_qdq_records(OpGroup.GEMM, "linear"))) == []
+
+
+def test_ng004_flags_untagged_cancelling_cast_roundtrip():
+    recs = [
+        _rec(0, "convert_element_type", OpGroup.MEMORY,
+             "convert_element_type", in_dtypes=("float32",),
+             out_dtypes=("bfloat16",), out_vids=(5,)),
+        _rec(1, "convert_element_type", OpGroup.MEMORY,
+             "convert_element_type", in_dtypes=("bfloat16",),
+             out_dtypes=("float32",), in_vids=(5,)),
+    ]
+    out = _run("NG004", _ctx(recs))
+    assert len(out) == 1
+    assert "round-trip" in out[0].message
+
+
+# ---------------------------------------------------------------------------
+# NG005 — kernel spec soundness (static scope)
+# ---------------------------------------------------------------------------
+
+def test_static_rules_clean_on_this_repo():
+    assert run_static_rules() == []
+
+
+def test_ng005_flags_pattern_naming_missing_kernel(monkeypatch):
+    bad = F.FusionPattern("fused_ghost",
+                          ((OpGroup.NORMALIZATION, "rms_norm"),),
+                          min_records=2, kernel="ghost_kernel")
+    monkeypatch.setattr(F, "FUSION_PATTERNS", F.FUSION_PATTERNS + (bad,))
+    out = run_static_rules(rules=[get_rule("NG005")])
+    assert any("ghost_kernel" in f.message for f in out)
+
+
+def test_ng005_flags_unsound_kernel_spec(monkeypatch):
+    from repro.kernels import ops as K
+
+    def no_interpret_entry(x, block_rows=0):  # bad on both counts
+        return x
+
+    monkeypatch.setitem(
+        K.KERNEL_SPECS, "bad_kernel",
+        K.KernelSpec(name="bad_kernel", fn=no_interpret_entry,
+                     block_defaults={"block_rows": 0},
+                     handles_remainder=None))
+    out = run_static_rules(rules=[get_rule("NG005")])
+    msgs = [f.message for f in out if f.where == "kernel:bad_kernel"]
+    assert any("interpret" in m for m in msgs)
+    assert any("not a positive block shape" in m for m in msgs)
+    assert any("partial-block" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# NG006 — estimator holes
+# ---------------------------------------------------------------------------
+
+def test_ng006_flags_zero_bytes_and_zero_flop_compute():
+    recs = [
+        _rec(0, "mystery_move", OpGroup.MEMORY, "mystery_move", nbytes=0.0,
+             flops=0.0),
+        _rec(1, "tanh", OpGroup.ACTIVATION, "tanh", flops=0.0),
+    ]
+    out = _run("NG006", _ctx(recs))
+    assert len(out) == 2
+    assert any("bytes_accessed == 0" in f.message for f in out)
+    assert any("flops == 0" in f.message for f in out)
+
+
+def test_ng006_accepts_zero_width_outputs_and_memory_ops():
+    recs = [
+        # zero-width slice: producing nothing costs nothing
+        _rec(0, "slice", OpGroup.MEMORY, "slice", out_shapes=((4, 0),),
+             nbytes=0.0, flops=0.0),
+        # memory op with traffic but no FLOPs is fine
+        _rec(1, "reshape", OpGroup.MEMORY, "reshape", flops=0.0),
+    ]
+    assert _run("NG006", _ctx(recs)) == []
+
+
+# ---------------------------------------------------------------------------
+# NG007 — scope-tag discipline
+# ---------------------------------------------------------------------------
+
+def test_ng007_flags_unparseable_ng_tag():
+    recs = [_rec(0, "add", OpGroup.ELEMENTWISE, "add",
+                 scope="layer0/ng:notagroup:foo")]
+    out = _run("NG007", _ctx(recs))
+    assert len(out) == 1 and out[0].severity == "error"
+
+
+def test_ng007_clean_on_valid_tags_and_untagged_scopes():
+    recs = [_rec(0, "add", OpGroup.ELEMENTWISE, "residual_add",
+                 scope=scope_tag(OpGroup.ELEMENTWISE, "residual_add")),
+            _rec(1, "add", OpGroup.ELEMENTWISE, "add", scope="layer0")]
+    assert _run("NG007", _ctx(recs)) == []
+
+
+# ---------------------------------------------------------------------------
+# NG008 — share drift vs baseline
+# ---------------------------------------------------------------------------
+
+def test_ng008_flags_share_drift_beyond_tolerance():
+    ctx = _ctx([], group_shares={"gemm": 0.50, "normalization": 0.20},
+               baseline_shares={"gemm": 0.60, "normalization": 0.19},
+               share_tolerance=0.03)
+    out = _run("NG008", ctx)
+    assert len(out) == 1
+    assert out[0].where == "group:gemm"
+
+
+def test_ng008_silent_without_baseline_entry_or_within_tolerance():
+    assert _run("NG008", _ctx([], group_shares={"gemm": 0.5})) == []
+    ctx = _ctx([], group_shares={"gemm": 0.51},
+               baseline_shares={"gemm": 0.50}, share_tolerance=0.03)
+    assert _run("NG008", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline gate
+# ---------------------------------------------------------------------------
+
+def _finding(rule="NG006", workload="w/fp32"):
+    return Finding(rule=rule, severity="warning", workload=workload,
+                   where="x", message="m")
+
+
+def test_gate_without_baseline_everything_is_new():
+    fs = [_finding(), _finding()]
+    assert gate_findings(fs, None) == fs
+
+
+def test_gate_consumes_per_rule_budget_in_stream_order():
+    baseline = AnalysisBaseline(workloads={
+        "w/fp32": WorkloadBaseline(findings={"NG006": 1})})
+    fs = [_finding(), _finding(), _finding(workload="other/fp32")]
+    new = gate_findings(fs, baseline)
+    # one w/fp32 finding suppressed by the budget; the unknown key gets 0
+    assert new == [fs[1], fs[2]]
+
+
+def test_baseline_roundtrip_and_version_check(tmp_path):
+    p = tmp_path / "b.json"
+    b = build_baseline({"w/fp32": {"gemm": 0.5}}, [_finding()],
+                       share_tolerance=0.05)
+    save_baseline(b, p)
+    loaded = load_baseline(p)
+    assert loaded.share_tolerance == 0.05
+    assert loaded.entry("w/fp32").findings == {"NG006": 1}
+    assert loaded.entry("w/fp32").group_shares == {"gemm": 0.5}
+
+    stale = b.to_dict()
+    stale["version"] = 99
+    p.write_text(__import__("json").dumps(stale))
+    with pytest.raises(BaselineError, match="version"):
+        load_baseline(p)
+    with pytest.raises(BaselineError, match="not found"):
+        load_baseline(tmp_path / "missing.json")
+
+
+def test_committed_baseline_parses_and_covers_the_zoo():
+    b = load_baseline("benchmarks/analysis_baseline.json")
+    keys = set(b.workloads)
+    for arch in A_cli.zoo_ids():
+        for variant in A_cli.DEFAULT_VARIANTS:
+            assert f"{arch}/{variant}" in keys
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_list_rules_and_workloads(capsys):
+    assert A_cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "NG001" in out and "NG008" in out
+    assert A_cli.main(["--list"]) == 0
+    assert "gpt2-xl" in capsys.readouterr().out
+
+
+def test_cli_rejects_unknown_workload_and_variant(capsys):
+    assert A_cli.main(["no_such_model"]) == 2
+    assert A_cli.main(["--variants", "fp99"]) == 2
+
+
+def test_cli_single_cell_runs_clean_against_committed_baseline(tmp_path):
+    art = tmp_path / "analysis.json"
+    rc = A_cli.main(["bert-base", "--variants", "fp32", "-q",
+                     "--out", str(art)])
+    assert rc == 0
+    data = __import__("json").loads(art.read_text())
+    assert data["new_findings"] == []
+    assert "bert-base/fp32" in data["workloads"]
+    assert data["workloads"]["bert-base/fp32"]["n_records"] > 0
+
+
+def test_render_summary_markdown_lists_new_findings():
+    md = A_cli.render_summary_markdown([], [_finding()], [_finding()])
+    assert "nglint" in md and "NG006" in md and "| rule |" in md
+    clean = A_cli.render_summary_markdown([], [], [])
+    assert "No new findings" in clean
+
+
+def test_write_github_summary_appends(tmp_path, monkeypatch):
+    target = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(target))
+    assert A_cli.write_github_summary("hello")
+    assert A_cli.write_github_summary("world")
+    assert target.read_text() == "hello\nworld\n"
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY")
+    assert not A_cli.write_github_summary("dropped")
+
+
+def test_build_context_variant_labels_match_baseline_keys():
+    assert set(A_cli.DEFAULT_VARIANTS) <= set(A_cli.VARIANTS)
+    # the variant factory must produce fresh transform instances
+    a = A_cli.VARIANTS["fused"]()
+    b = A_cli.VARIANTS["fused"]()
+    assert a is not b

@@ -2,8 +2,8 @@
 
 import time
 
-from repro.bench.runner import (BenchContext, Section, SectionTimeout,
-                                SkipSection, run_section)
+from repro.bench.runner import (BenchContext, Section, SkipSection,
+                                run_section)
 
 
 def ctx():

@@ -5,7 +5,6 @@ direction (fused latency and NonGEMM share strictly lower), and the
 compare-gate invariant."""
 
 import copy
-import os
 
 import jax
 import jax.numpy as jnp

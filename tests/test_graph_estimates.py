@@ -1,0 +1,110 @@
+"""FLOP/byte estimates for the awkward prims (gather/scatter, windows, casts).
+
+These primitives used to fall through ``estimate_flops``/``estimate_bytes``
+defaults and come back as silent ``0.0``, which nglint's NG006 then flags.
+Each test captures a real jaxpr so the prim names are the ones JAX actually
+emits (e.g. ``reduce_window_max``), not hand-guessed strings.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.core.graph import capture, estimate_bytes, estimate_flops
+from repro.core.taxonomy import OpGroup
+
+
+def _records_for(prim_prefix, fn, *args):
+    recs = [r for r in capture(fn, *args) if r.prim.startswith(prim_prefix)]
+    assert recs, f"capture produced no {prim_prefix!r} record"
+    return recs
+
+
+def test_gather_bytes_nonzero_and_slice_sized():
+    table = jnp.zeros((1000, 64), jnp.float32)
+    idx = jnp.array([3, 5, 7], jnp.int32)
+
+    recs = _records_for("gather", lambda t, i: t[i], table, idx)
+    for r in recs:
+        assert r.bytes_accessed > 0.0
+        # indexed read touches ~the slice, not the whole 1000-row table
+        assert r.bytes_accessed < table.size * 4
+
+def test_scatter_bytes_nonzero():
+    table = jnp.zeros((100, 8), jnp.float32)
+    idx = jnp.array([1, 2], jnp.int32)
+    upd = jnp.ones((2, 8), jnp.float32)
+
+    recs = _records_for("scatter", lambda t, i, u: t.at[i].add(u),
+                        table, idx, upd)
+    for r in recs:
+        assert r.bytes_accessed > 0.0
+
+
+def test_dynamic_update_slice_bytes_nonzero():
+    cache = jnp.zeros((1, 128, 64), jnp.float32)
+    new = jnp.ones((1, 1, 64), jnp.float32)
+
+    recs = _records_for(
+        "dynamic_update_slice",
+        lambda c, x: lax.dynamic_update_slice(c, x, (0, 7, 0)), cache, new)
+    for r in recs:
+        assert r.group == OpGroup.MEMORY
+        assert r.bytes_accessed > 0.0
+
+
+def test_reduce_window_flops_and_bytes_nonzero():
+    x = jnp.ones((1, 8, 16, 16), jnp.float32)
+
+    def pool(v):
+        return lax.reduce_window(v, -jnp.inf, lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+    recs = _records_for("reduce_window", pool, x)
+    for r in recs:
+        assert r.group == OpGroup.REDUCTION
+        assert r.flops > 0.0, "reduce_window fell through to 0 FLOPs"
+        assert r.bytes_accessed > 0.0
+
+
+def test_select_and_scatter_add_flops_nonzero():
+    # max-pool VJP lowers to select_and_scatter_add — the REDUCTION prim
+    # that does *not* spell "reduce_"
+    x = jnp.ones((1, 1, 8, 8), jnp.float32)
+
+    def pool_sum(v):
+        return lax.reduce_window(v, -jnp.inf, lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID").sum()
+
+    recs = _records_for("select_and_scatter", jax.grad(pool_sum), x)
+    for r in recs:
+        assert r.group == OpGroup.REDUCTION
+        assert r.flops > 0.0
+        assert r.bytes_accessed > 0.0
+
+
+def test_convert_element_type_bytes_reflect_both_dtypes():
+    x = jnp.ones((64, 64), jnp.float32)
+
+    recs = _records_for("convert_element_type",
+                        lambda v: v.astype(jnp.bfloat16), x)
+    (r,) = recs
+    assert r.group == OpGroup.MEMORY
+    # 4B read per element + 2B write per element
+    assert r.bytes_accessed == pytest.approx(64 * 64 * (4 + 2))
+
+
+@pytest.mark.parametrize("prim", ["gather", "scatter", "dynamic_update_slice"])
+def test_estimate_bytes_slicing_prims_use_touched_data(prim):
+    # direct unit check of the _SLICING_PRIMS branch: 2*out + index bytes
+    out = ((4, 8),)
+    got = estimate_bytes(((1000, 8), (4,)), ("float32", "int32"),
+                         out, ("float32",), prim=prim)
+    assert got == pytest.approx(2.0 * 4 * 8 * 4 + 4 * 4)
+    assert got > 0.0
+
+
+def test_estimate_flops_reduce_window_variants_nonzero():
+    for prim in ("reduce_window_sum", "reduce_window_max",
+                 "select_and_scatter_add"):
+        assert estimate_flops(prim, {}, ((2, 32, 32),), ((2, 16, 16),)) > 0.0

@@ -4,7 +4,7 @@ synthetic dumps so the assertions stay deterministic."""
 
 import pytest
 
-from repro.core.hlo import HloProfile, ProfiledOp, parse_hlo_profile
+from repro.core.hlo import HloProfile, parse_hlo_profile
 
 # The shape XLA emits with --xla_hlo_profile: a cycles column, a usec
 # column, more ::-separated rate columns, and the instruction text last.

@@ -4,7 +4,6 @@ step-by-step recurrence oracles; prefill/decode consistency."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import recurrent as R
 from repro.models import xlstm as X

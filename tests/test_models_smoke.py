@@ -9,9 +9,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, PAPER_IDS, get_config, reduced
-from repro.data import DataConfig, make_batch
-from repro.models import (count_params, init_lm, init_lm_cache, lm_decode,
-                          lm_forward, lm_loss, lm_prefill)
+from repro.models import (count_params, init_lm, lm_decode, lm_forward,
+                          lm_loss, lm_prefill)
 from repro.optim import OptimizerConfig, adamw_update, init_opt_state
 
 ALL = ARCH_IDS + PAPER_IDS

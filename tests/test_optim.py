@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis",
                     reason="property tests need the hypothesis dev extra")
 from hypothesis import given, settings, strategies as st
 
-from repro.optim import (OptimizerConfig, adamw_update, apply_error_feedback,
+from repro.optim import (OptimizerConfig, adamw_update,
                          clip_by_global_norm, compress_decompress,
                          cosine_schedule, dequantize_int8, global_norm,
                          init_opt_state, quantize_int8)

@@ -8,7 +8,7 @@ import pytest
 from repro.checkpoint import checksum
 from repro.configs import get_config, reduced
 from repro.data import DataConfig
-from repro.models import init_lm, lm_forward
+from repro.models import init_lm
 from repro.optim import OptimizerConfig
 from repro.runtime import (StragglerWatchdog, Trainer, microbatch_split,
                            pick_microbatches)
@@ -178,8 +178,8 @@ def reference_generate(cfg, params, prompt, max_new_tokens, max_len=64):
 def test_engine_serves_batches(serving_model):
     cfg, params = serving_model
     eng = Engine(cfg, params, max_batch=3, max_len=64)
-    uids = [eng.add_request(list(range(1, 5 + i)), max_new_tokens=6)
-            for i in range(7)]
+    for i in range(7):
+        eng.add_request(list(range(1, 5 + i)), max_new_tokens=6)
     done = eng.run()
     assert len(done) == 7
     assert all(r.done and 1 <= len(r.output) <= 6 for r in done)

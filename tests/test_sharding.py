@@ -4,7 +4,6 @@ assigned zoo."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro import sharding as sh

@@ -4,10 +4,9 @@ ways (through the unified Workload API) and reproduce the headline claim's
 plumbing."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import get_config, reduced
+from repro.configs import get_config
 from repro.core import NONGEMM_GROUPS, OpGroup, Workload
 from repro.core.report import (breakdown_csv, breakdown_table,
                                group_table, shift_summary, top_group_table)

@@ -1,12 +1,16 @@
 """Unit tests: operator taxonomy + scope-tag plumbing (paper §2.1.2)."""
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.taxonomy import (NONGEMM_GROUPS, OpGroup, classify,
-                                 classify_hlo, classify_primitive,
-                                 is_gemm, is_nongemm, parse_scope, scope_tag)
+from repro.core import taxonomy
+from repro.core.taxonomy import (NONGEMM_GROUPS, UNKNOWN_PRIMS, OpGroup,
+                                 classify, classify_hlo, classify_primitive,
+                                 is_gemm, is_known_primitive, is_nongemm,
+                                 lookup_primitive, parse_scope, scope_tag)
 
 
 def test_scope_tag_roundtrip():
@@ -49,6 +53,41 @@ def test_parse_scope_none_for_untagged():
 ])
 def test_classify_primitive(prim, group):
     assert classify_primitive(prim) == group
+
+
+def test_unknown_prims_are_counted_and_warned_once():
+    # regression: the OTHER fallback used to be silent, so taxonomy holes
+    # (the PR 5 pooling bug class) never surfaced anywhere
+    prim = "totally_made_up_prim_for_this_test"
+    UNKNOWN_PRIMS.pop(prim, None)
+    taxonomy._WARNED_UNKNOWN.discard(prim)
+
+    with pytest.warns(UserWarning, match=prim):
+        assert classify_primitive(prim) == OpGroup.OTHER
+    assert UNKNOWN_PRIMS[prim] == 1
+
+    # second hit: counted again, but no second warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert classify_primitive(prim) == OpGroup.OTHER
+    assert UNKNOWN_PRIMS[prim] == 2
+
+
+def test_lookup_primitive_does_not_touch_the_unknown_accounting():
+    prim = "another_made_up_prim"
+    UNKNOWN_PRIMS.pop(prim, None)
+    assert lookup_primitive(prim) is None
+    assert lookup_primitive("add") == OpGroup.ELEMENTWISE
+    assert not is_known_primitive(prim)
+    assert is_known_primitive("dot_general")
+    assert prim not in UNKNOWN_PRIMS
+
+
+def test_name_marker_primitive_is_registered():
+    # jax.nn wraps results in the `name` identity primitive; it must not
+    # trip the unknown-primitive path on every capture
+    assert is_known_primitive("name")
+    assert classify_primitive("name") == OpGroup.MEMORY
 
 
 def test_classify_prefers_tag_over_primitive():
