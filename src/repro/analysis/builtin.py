@@ -1,4 +1,4 @@
-"""The built-in nglint rules (NG001–NG008).
+"""The built-in nglint rules (NG001–NG009).
 
 Each rule polices one invariant the repro's headline numbers depend on:
 
@@ -20,6 +20,9 @@ NG007  scope-tag discipline: every ``ng:`` tag in a captured scope parses
        back to a known operator group
 NG008  per-group latency shares stay within tolerance of the committed
        baseline (``benchmarks/analysis_baseline.json``)
+NG009  the paged-KV bookkeeping ops (block-table gather / scatter /
+       per-slot write) classify as ``OpGroup.MEMORY`` with nonzero
+       modeled bytes — the "NonGEMM share of serving" depends on it
 ====== ===================================================================
 
 Rules are registered on import (`repro.analysis` imports this module).
@@ -365,6 +368,74 @@ def check_share_drift(ctx: AnalysisContext):
                     "vs benchmarks/analysis_baseline.json",
             fix_hint="if intentional, regenerate the baseline with "
                      "`python -m repro.analyze --all --write-baseline`")
+
+
+# ---------------------------------------------------------------------------
+# NG009 — paged-KV bookkeeping ops land in MEMORY with nonzero bytes (static)
+# ---------------------------------------------------------------------------
+
+@rule("NG009", "paged-KV bookkeeping ops classify as MEMORY with bytes",
+      severity="error", scope="static")
+def check_paged_kv_ops(_ctx: Optional[AnalysisContext]):
+    """Captures tiny programs over the paged serving ops and asserts every
+    tagged record lands in ``OpGroup.MEMORY`` with modeled bytes > 0 — if
+    the block-table gather/scatter bookkeeping ever falls out of MEMORY
+    (or models zero traffic), the traffic section's "NonGEMM share of
+    serving" silently underreports."""
+    import jax.numpy as jnp
+
+    from repro import nn
+    from repro.core.graph import capture
+
+    pool = jnp.zeros((4, 2, 3), jnp.float32)      # (blocks, block_size, d)
+    table = jnp.array([[1, 2]], jnp.int32)        # one sequence, two blocks
+    row = jnp.array([1, 2], jnp.int32)
+    sites = (
+        # max_len is a static python int (slice bound), so it is closed
+        # over rather than traced by capture's make_jaxpr
+        ("paged_kv_gather", lambda p, t: nn.paged_kv_gather(p, t, 4),
+         (pool, table)),
+        ("paged_kv_write", nn.paged_kv_write,
+         (pool, jnp.ones((1, 1, 3), jnp.float32), table,
+          jnp.array([1], jnp.int32))),
+        ("paged_kv_scatter", nn.paged_kv_scatter,
+         (pool, jnp.ones((2, 3), jnp.float32), row,
+          jnp.int32(0), jnp.int32(0), jnp.int32(2))),
+    )
+    for site, fn, args in sites:
+        tagged = [r for r in capture(fn, *args) if r.op_site == site]
+        where = f"nn.{site}"
+        if not tagged:
+            yield Finding(
+                rule="NG009", severity="error", workload="static",
+                where=where,
+                message=f"no captured record carries op_site {site!r} — "
+                        "the op lost its taxonomy tag and its latency "
+                        "scatters across structural groups",
+                fix_hint="keep the @tagged(OpGroup.MEMORY, ...) decorator "
+                         "on the op in repro/nn")
+            continue
+        off_group = sorted({r.prim for r in tagged
+                            if r.group is not OpGroup.MEMORY})
+        if off_group:
+            yield Finding(
+                rule="NG009", severity="error", workload="static",
+                where=where,
+                message=f"record(s) {off_group} inside the {site!r} site "
+                        "classify outside OpGroup.MEMORY — paged "
+                        "bookkeeping must be attributed to MEMORY for the "
+                        "serving NonGEMM share",
+                fix_hint="tag the op with OpGroup.MEMORY (repro/nn) and "
+                         "keep its primitives in _PRIM_GROUPS' MEMORY set")
+        if sum(r.bytes_accessed for r in tagged) <= 0.0:
+            yield Finding(
+                rule="NG009", severity="error", workload="static",
+                where=where,
+                message=f"{site!r} records model zero bytes_accessed — "
+                        "the gather/scatter traffic vanishes from every "
+                        "roofline and share",
+                fix_hint="extend estimate_bytes in repro/core/graph.py "
+                         "for the slicing/scatter primitives involved")
 
 
 #: Mapping rule id -> short description, for docs / --list-rules

@@ -33,7 +33,7 @@ from repro.core.profiler import model_records
 from repro.core.workload import (QuantizeDequantTransform, Workload,
                                  _compose_record_rewrites)
 
-from . import builtin  # noqa: F401  (registers NG001..NG008 on import)
+from . import builtin  # noqa: F401  (registers NG001..NG009 on import)
 from .baseline import (DEFAULT_BASELINE, AnalysisBaseline, BaselineError,
                        build_baseline, gate_findings, load_baseline,
                        save_baseline)

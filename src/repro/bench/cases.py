@@ -39,6 +39,13 @@ SERVING_CASES: List[BenchCase] = [
     BenchCase("serve stablelm b-4", "stablelm-3b", 4, 64, _Q),
 ]
 
+#: traffic cases: (alias, arch, max_batch, max_len) for the paged-KV
+#: engine under trace-driven load (attention-only archs: the paged pools
+#: page the per-layer KV leaves, so recurrent/local mixers are out)
+TRAFFIC_CASES: List[BenchCase] = [
+    BenchCase("traffic stablelm b-3", "stablelm-3b", 3, 64, _Q),
+]
+
 #: vision cases (paper's Torchvision half): seq is the encoder token
 #: count, derived from the config's patch grid so the case can never
 #: drift from what vision_case_workload actually builds (the detector's

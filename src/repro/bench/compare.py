@@ -23,7 +23,7 @@ What is gated, and how:
                        so they are only checked when ``--time-tolerance``
                        is given (relative, e.g. 3.0 = up to 4x slower).
 
-Four paper invariants are re-checked on the *candidate* artifact itself
+Five invariants are re-checked on the *candidate* artifact itself
 (not just diffed against the baseline):
 
   * quantized §4.4  — per (case, mode), the int8-QDQ NonGEMM share must
@@ -43,6 +43,12 @@ Four paper invariants are re-checked on the *candidate* artifact itself
                       NonGEMM share grows as GEMM gets cheaper (paper
                       Table 3); measured + calibrated host rows must carry
                       per-group drift maps.
+  * traffic         — the paged-KV engine's outputs must stay bit-identical
+                      to the contiguous engine's, the shared-prefix trace
+                      must hit the prefix cache with warm service TTFT below
+                      the cold run's, and the paged decode profile must
+                      report a nonzero MEMORY-group / paged-bookkeeping
+                      share.
 
 Rows present only in the *new* artifact are additions, never regressions.
 Exit codes: 0 clean, 1 regressions found, 2 bad input.
@@ -58,7 +64,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .schema import (SHARE_SECTIONS, BenchResult, SchemaError,
                      check_fusion_invariant, check_platforms_invariant,
-                     check_vision_invariant)
+                     check_traffic_invariant, check_vision_invariant)
 
 SHARE_KEYS = ("gemm_frac", "nongemm_frac")
 
@@ -87,6 +93,7 @@ ROW_KEYS = {
     "kernels": ("site",),
     "roofline": ("arch", "shape", "mesh", "label", "model"),
     "serving": ("case", "phase"),
+    "traffic": ("case", "phase"),
     "quantized": ("case", "mode", "variant"),
     "fusion": ("case", "mode", "variant"),
     "vision": ("case", "mode", "variant"),
@@ -125,6 +132,15 @@ def _check_vision_direction(sec, findings: List["Finding"]) -> None:
     shares nonzero, pooling in Reduction, fused below fp32) — the same
     ``check_vision_invariant`` the vision section gates itself with."""
     for where, message in check_vision_invariant(sec.rows):
+        findings.append(Finding("regression", where, message))
+
+
+def _check_traffic_direction(sec, findings: List["Finding"]) -> None:
+    """Traffic invariant on the *new* artifact (paged/contiguous output
+    parity, prefix-cache hits with warm TTFT below cold, nonzero paged
+    MEMORY bookkeeping share) — the same ``check_traffic_invariant`` the
+    traffic section gates itself with."""
+    for where, message in check_traffic_invariant(sec.rows):
         findings.append(Finding("regression", where, message))
 
 
@@ -302,6 +318,9 @@ def compare_artifacts(old: BenchResult, new: BenchResult,
     pl = new.section("platforms")
     if pl is not None and pl.status == "ok":
         _check_platforms_direction(pl, findings)
+    tr = new.section("traffic")
+    if tr is not None and tr.status == "ok":
+        _check_traffic_direction(tr, findings)
     return findings
 
 
@@ -364,6 +383,32 @@ def render_summary_markdown(old: BenchResult, new: BenchResult,
                 f"| {100*float(r.get('roi_frac', 0.0)):.1f} "
                 f"| {100*float(r.get('interp_frac', 0.0)):.1f} "
                 f"| {100*float(gf.get('reduction', 0.0)):.1f} |")
+    tr = new.section("traffic")
+    if tr is not None and tr.status == "ok" and tr.rows:
+        def _cell(row, key, fmt):
+            v = row.get(key)
+            return fmt.format(float(v)) if isinstance(v, (int, float)) and \
+                not isinstance(v, bool) else "—"
+
+        lines += [
+            "",
+            "### traffic (paged-KV engine under trace-driven load, "
+            "candidate)",
+            "",
+            "| case | phase | parity | hit rate | p99 TTFT | goodput "
+            "| NonGEMM% | paged% |",
+            "|---|---|---|---:|---:|---:|---:|---:|",
+        ]
+        for r in tr.rows:
+            parity = r.get("parity_ok")
+            lines.append(
+                f"| {r.get('case')} | {r.get('phase')} "
+                f"| {'✅' if parity is True else '❌' if parity is False else '—'} "
+                f"| {_cell(r, 'hit_rate', '{:.2f}')} "
+                f"| {_cell(r, 'p99_ttft_s', '{:.4f}s')} "
+                f"| {_cell(r, 'goodput_tok_per_s', '{:.1f} tok/s')} "
+                f"| {_cell(r, 'nongemm_frac', '{:.2%}')} "
+                f"| {_cell(r, 'paged_frac', '{:.2%}')} |")
     pl = new.section("platforms")
     if pl is not None and pl.status == "ok" and pl.rows:
         lines += [

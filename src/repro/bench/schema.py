@@ -41,7 +41,7 @@ KNOWN_TIERS = ("quick", "full")
 #: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
 #: present; the serving section's "engine" rows carry throughput instead)
 SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving",
-                  "quantized", "fusion", "vision", "platforms")
+                  "quantized", "fusion", "vision", "platforms", "traffic")
 
 #: fusion section (paper §6): unfused variant -> its fused twin, per
 #: (case, mode). Both the section's own gate (repro.bench.sections) and
@@ -176,6 +176,80 @@ def check_vision_invariant(rows: Sequence[dict]) -> List[tuple]:
                 f"(paper §6)")))
     return violations
 
+def check_traffic_invariant(rows: Sequence[dict]) -> List[tuple]:
+    """The serving-traffic invariant over traffic-section rows.
+
+    Single implementation shared by the section's own gate
+    (``repro.bench.sections.traffic_rows`` raises on any violation) and
+    the compare CLI (regression Findings on the candidate artifact).
+    Per case:
+
+    * a ``phase="parity"`` row with ``parity_ok`` true — the paged-KV
+      engine must emit bit-identical outputs to the contiguous engine;
+    * a ``phase="prefix"`` row with prefix ``hit_rate`` strictly positive
+      and warm (prefix-cached) mean service TTFT strictly below the cold
+      (cache-disabled) run's — cached blocks must actually skip prefill
+      work — and bit-identical warm/cold outputs (``parity_ok``);
+    * a ``phase="profile"`` row whose MEMORY-group share and paged
+      bookkeeping share (``paged_frac``: the block-table gather/scatter
+      op sites) are both strictly positive — the "NonGEMM share of
+      serving" evidence this section exists to report.
+    """
+    violations: List[tuple] = []
+    by_case: Dict[str, Dict[str, dict]] = {}
+    for row in rows:
+        by_case.setdefault(str(row.get("case")), {})[
+            str(row.get("phase"))] = row
+    for case, by_phase in sorted(by_case.items()):
+        missing = [p for p in ("parity", "prefix", "profile")
+                   if p not in by_phase]
+        if missing:
+            violations.append((f"traffic[{case}]",
+                               f"missing phase rows {missing}"))
+        parity = by_phase.get("parity")
+        if parity is not None and parity.get("parity_ok") is not True:
+            violations.append((f"traffic[{case}, parity]", (
+                "paged engine outputs are not bit-identical to the "
+                "contiguous engine's (parity_ok is "
+                f"{parity.get('parity_ok')!r})")))
+        prefix = by_phase.get("prefix")
+        if prefix is not None:
+            where = f"traffic[{case}, prefix]"
+            hit = prefix.get("hit_rate")
+            if not (_is_num(hit) and float(hit) > 0.0):
+                violations.append((where, (
+                    f"prefix hit_rate is {hit!r} — the shared-prefix trace "
+                    f"must produce cache hits")))
+            warm = prefix.get("warm_service_ttft_s")
+            cold = prefix.get("cold_service_ttft_s")
+            if _is_num(warm) and _is_num(cold) and \
+                    not float(warm) < float(cold):
+                violations.append((where, (
+                    f"warm mean service TTFT {warm:.4g}s is not below the "
+                    f"cold run's {cold:.4g}s — prefix-cached blocks must "
+                    f"skip prefill work")))
+            if prefix.get("parity_ok") is not True:
+                violations.append((where, (
+                    "prefix-cached outputs are not bit-identical to the "
+                    "cache-disabled run's (parity_ok is "
+                    f"{prefix.get('parity_ok')!r})")))
+        profile = by_phase.get("profile")
+        if profile is not None:
+            where = f"traffic[{case}, profile]"
+            mem = (profile.get("group_fracs") or {}).get("memory")
+            if not (_is_num(mem) and float(mem) > 0.0):
+                violations.append((where, (
+                    f"MEMORY-group share is {mem!r} — paged block-table "
+                    f"gather/scatter must classify as MEMORY with nonzero "
+                    f"share")))
+            paged = profile.get("paged_frac")
+            if not (_is_num(paged) and float(paged) > 0.0):
+                violations.append((where, (
+                    f"paged_frac is {paged!r} — the paged-KV bookkeeping "
+                    f"op sites must carry a nonzero share")))
+    return violations
+
+
 def check_platforms_invariant(rows: Sequence[dict]) -> List[tuple]:
     """The cross-platform invariant over platforms-section rows.
 
@@ -271,6 +345,7 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
     "kernels": ("site", "eager_mb", "xla_mb", "pallas_mb", "allclose"),
     "roofline": ("arch", "shape", "mesh"),
     "serving": ("case", "phase"),
+    "traffic": ("case", "phase"),
     "quantized": ("case", "mode", "variant", "gemm_frac", "nongemm_frac",
                   "group_fracs", "qdq_frac"),
     "fusion": ("case", "mode", "variant", "total_s", "gemm_frac",

@@ -16,14 +16,15 @@ from typing import List, Sequence
 from repro.core.microbench import TABLE2_SHAPES, run_micro
 from repro.core.report import profile_row
 
-from .cases import (SERVING_CASES, VISION_CASES, build, build_serving,
-                    profile_case, profile_case_calibrated,
+from .cases import (SERVING_CASES, TRAFFIC_CASES, VISION_CASES, build,
+                    build_serving, profile_case, profile_case_calibrated,
                     profile_case_compiled, profile_case_fused,
                     profile_case_measured, profile_case_platforms,
                     profile_case_quantized, profile_case_vision, tier_cases)
 from .runner import BenchContext, SkipSection, register_section
 from .schema import (BenchCase, check_fusion_invariant,
-                     check_platforms_invariant, check_vision_invariant)
+                     check_platforms_invariant, check_traffic_invariant,
+                     check_vision_invariant)
 
 
 def _results_root() -> str:
@@ -566,6 +567,137 @@ def section_serving(ctx: BenchContext) -> List[dict]:
     rows: List[dict] = []
     for c in cases:
         rows += serving_rows(c)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §Traffic — paged-KV engine under trace-driven load
+# ---------------------------------------------------------------------------
+
+def traffic_rows(case: BenchCase, n_requests: int = 8) -> List[dict]:
+    """Four row kinds per traffic case, gated by the same
+    ``check_traffic_invariant`` the compare CLI re-runs on candidates:
+
+    * ``phase="parity"`` — the paged-KV engine replays the contiguous
+      engine's exact requests; outputs must match bit for bit;
+    * ``phase="load"`` — trace-driven Poisson load through the paged
+      engine (jit caches primed on a token-remapped shadow trace first):
+      TTFT percentiles, queue wait, per-token latency, goodput;
+    * ``phase="prefix"`` — shared-prefix trace, prefix cache on vs off:
+      hit rate, warm-vs-cold mean service TTFT, and output parity;
+    * ``phase="profile"`` — modeled eager-A100 GEMM/NonGEMM split of the
+      paged decode step, with ``paged_frac`` attributing the block-table
+      gather/scatter bookkeeping through the OpGroup taxonomy — the
+      "NonGEMM share of serving".
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import Workload
+    from repro.models import init_lm_cache
+    from repro.serving import Engine, PagedEngine
+    from repro.serving.paged import make_paged_decode_step
+    from repro.traffic import drive, poisson_trace, prime, shared_prefix_trace
+
+    alias, arch, max_batch, max_len = case
+    cfg, params = build_serving(arch)
+    vocab = cfg.vocab_size
+    block_size, chunk_size = 8, 16
+
+    def mk(**kw):
+        return PagedEngine(cfg, params, max_batch=max_batch, max_len=max_len,
+                           block_size=block_size, chunk_size=chunk_size,
+                           greedy=True, **kw)
+
+    def outputs(finished):
+        return {tuple(r.prompt): r.output for r in finished}
+
+    # parity: identical requests through the contiguous and paged engines
+    trace = poisson_trace(0, n_requests, 200.0, vocab,
+                          prompt_len=(3, 40), output_len=(2, 6))
+    ref = Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                 greedy=True)
+    paged = mk()
+    for r in trace:
+        ref.add_request(r.prompt, r.max_new_tokens)
+        paged.add_request(r.prompt, r.max_new_tokens)
+    rows = [{"case": alias, "phase": "parity",
+             "parity_ok": outputs(ref.run()) == outputs(paged.run()),
+             "requests": n_requests}]
+
+    # load: the same Poisson trace, replayed through the trace driver
+    eng = mk()
+    prime(eng, trace, vocab)
+    _, rep = drive(eng, trace, time_scale=1e5)
+    rows.append({"case": alias, "phase": "load", "trace": "poisson",
+                 **rep.to_dict()})
+
+    # prefix: shared-prefix trace with the cache on vs off (both primed
+    # on a shadow trace, so TTFT compares service time, not compile time)
+    sp = shared_prefix_trace(7, n_requests, vocab, prefix_len=32,
+                             suffix_len=(4, 8))
+    warm, cold = mk(prefix_caching=True), mk(prefix_caching=False)
+    prime(warm, sp, vocab)
+    prime(cold, sp, vocab)
+    fin_w, rep_w = drive(warm, sp, time_scale=1e5)
+    fin_c, rep_c = drive(cold, sp, time_scale=1e5)
+    rows.append({
+        "case": alias, "phase": "prefix", "trace": "shared_prefix",
+        "hit_rate": rep_w.prefix_hit_rate,
+        "warm_service_ttft_s": rep_w.mean_service_ttft_s,
+        "cold_service_ttft_s": rep_c.mean_service_ttft_s,
+        "parity_ok": outputs(fin_w) == outputs(fin_c),
+    })
+
+    # profile: modeled eager-A100 split of the paged decode step itself
+    blocks_per_seq = -(-max_len // block_size)
+    num_blocks = 1 + max_batch * blocks_per_seq
+    pools = init_lm_cache(cfg, num_blocks, block_size)
+    tables = jnp.arange(1, num_blocks, dtype=jnp.int32).reshape(
+        max_batch, blocks_per_seq)
+    token = jnp.ones((max_batch,), jnp.int32)
+    pos = jnp.arange(4, 4 + max_batch, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    step = make_paged_decode_step(cfg, max_len, greedy=True)
+
+    def decode_fn(params, token, pos, pools, tables, key):
+        return step(params, token, pos, pools, tables, key)[0]
+
+    w = Workload(name=alias, arch=arch, phase="decode", batch=max_batch,
+                 seq=max_len, dtype=cfg.dtype,
+                 builder=lambda _w: (decode_fn,
+                                     (token, pos, pools, tables, key),
+                                     params))
+    prof = w.profile("eager-modeled:a100")
+    row = profile_row(prof)
+    total = prof.total_seconds or 1.0
+    paged_sites = ("paged_kv_gather", "paged_kv_write", "paged_kv_scatter",
+                   "kv_cache_update")
+    paged_s = sum(t for (_g, site), t in prof.op_seconds.items()
+                  if site in paged_sites)
+    row.update(phase="profile",
+               memory_frac=row["group_fracs"].get("memory", 0.0),
+               paged_frac=paged_s / total)
+    rows.append(row)
+
+    violations = check_traffic_invariant(rows)
+    if violations:
+        raise AssertionError("; ".join(f"{w}: {m}" for w, m in violations))
+    return rows
+
+
+@register_section(
+    "traffic",
+    title="§Traffic — paged-KV engine under trace-driven load "
+          "(parity, TTFT/goodput, prefix-cache, NonGEMM share of serving)",
+    timeout_s=300.0)
+def section_traffic(ctx: BenchContext) -> List[dict]:
+    cases = tier_cases(ctx.tier, TRAFFIC_CASES)
+    if not cases:
+        raise SkipSection(f"no traffic cases in tier {ctx.tier!r}")
+    rows: List[dict] = []
+    for c in cases:
+        rows += traffic_rows(c)
     return rows
 
 

@@ -100,6 +100,38 @@ def attention(q, k, v, causal: bool = True, window: Optional[int] = None,
     return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d).astype(v.dtype)
 
 
+def paged_kv_gather(pool, block_table, max_len: int):
+    """Oracle for ``repro.nn.paged_kv_gather`` (untagged, same math)."""
+    bs = pool.shape[1]
+    b, nb = block_table.shape
+    g = jnp.take(pool, block_table.reshape(-1), axis=0)
+    return g.reshape(b, nb * bs, *pool.shape[2:])[:, :max_len]
+
+
+def paged_kv_write(pool, new, block_table, index):
+    """Oracle for ``repro.nn.paged_kv_write`` (untagged, same math)."""
+    bs = pool.shape[1]
+    index = jnp.asarray(index, jnp.int32)
+    block_ids = jnp.take_along_axis(
+        block_table, (index // bs)[:, None], axis=1)[:, 0]
+    return pool.at[block_ids, index % bs].set(new[:, 0].astype(pool.dtype))
+
+
+def paged_kv_scatter(pool, rows, block_table, start, lo, hi):
+    """Oracle for ``repro.nn.paged_kv_scatter`` (untagged, same math)."""
+    bs = pool.shape[1]
+    n = pool.shape[0]
+    idx = jnp.asarray(start, jnp.int32) + jnp.arange(rows.shape[0],
+                                                     dtype=jnp.int32)
+    blk = jnp.take(block_table,
+                   jnp.clip(idx // bs, 0, block_table.shape[0] - 1))
+    keep = (idx >= lo) & (idx < hi)
+    flat = jnp.where(keep, blk * bs + idx % bs, idx % bs)
+    out = pool.reshape(n * bs, *pool.shape[2:]).at[flat].set(
+        rows.astype(pool.dtype))
+    return out.reshape(pool.shape)
+
+
 def softmax_xent(logits, labels):
     """Per-row CE. logits (R, V) any float dtype; labels (R,) int32."""
     lf = logits.astype(jnp.float32)

@@ -5,13 +5,14 @@ from repro.models.common import (ModelConfig, SHAPES, ShapeSpec,
                                  LONG_CONTEXT_ARCHS, shape_applicable,
                                  count_params)
 from repro.models.transformer import (init_lm, lm_forward, lm_loss,
-                                      init_lm_cache, lm_prefill, lm_decode)
+                                      init_lm_cache, lm_prefill, lm_decode,
+                                      lm_extend)
 from repro.models.vision import (init_vision, vision_forward, vit_classify,
                                  detect_forward)
 
 __all__ = [
     "ModelConfig", "SHAPES", "ShapeSpec", "LONG_CONTEXT_ARCHS",
     "shape_applicable", "count_params", "init_lm", "lm_forward", "lm_loss",
-    "init_lm_cache", "lm_prefill", "lm_decode",
+    "init_lm_cache", "lm_prefill", "lm_decode", "lm_extend",
     "init_vision", "vision_forward", "vit_classify", "detect_forward",
 ]

@@ -556,6 +556,41 @@ def attn_decode(params, x, cfg: ModelConfig, kind: str, cache: dict,
     return nn.linear(o, params["wo"].astype(x.dtype)), new_cache
 
 
+def attn_extend(params, x, cfg: ModelConfig, kind: str, cache: dict,
+                start) -> Tuple[jax.Array, dict]:
+    """Chunked-prefill step: extend the cache with a (B, C) token chunk.
+
+    x: (B, C, D); ``start`` is a traced scalar int32 — the absolute
+    position of the chunk's first token. The chunk attends the full cache
+    depth (earlier chunks / reused prefix blocks are already resident) via
+    ``q_offset=start``; positions past the chunk are causally masked, so
+    stale rows there cannot contribute. K/V for the chunk land at
+    ``[start, start + C)``. Only full-cache attention supports extension —
+    a ring buffer cannot re-enter at an arbitrary depth.
+    """
+    if kind == "local":
+        raise ValueError("chunked prefill requires a full-depth cache; "
+                         "sliding-window layers cannot extend")
+    b, c_len, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(c_len, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (b, c_len))
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), start, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), start, axis=1)
+    # q_offset is only used inside mask computation, so a traced scalar
+    # works — but only through chunked_attention: the flash custom-VJP core
+    # takes q_offset as a nondiff argnum, which rejects tracers
+    out = chunked_attention(
+        q, k, v, causal=cfg.causal, q_offset=start,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        softcap=cfg.attn_logit_softcap)
+    y = nn.linear(nn.merge_heads(out), params["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2) — compressed KV latent attention
 # ---------------------------------------------------------------------------
@@ -672,3 +707,40 @@ def mla_decode(params, x, cfg: ModelConfig, cache: dict, pos):
     out = out.reshape(b, 1, h * vd)
     return (nn.linear(out, params["wo"].astype(x.dtype)),
             {"c": c, "kr": kr})
+
+
+def mla_extend(params, x, cfg: ModelConfig, cache: dict,
+               start) -> Tuple[jax.Array, dict]:
+    """Chunked-prefill MLA step: extend the latent cache with a (B, C) chunk.
+
+    Mirrors :func:`attn_extend`: writes (c, kr) at ``[start, start + C)``,
+    expands K/V from the FULL cached latent depth (like ``mla_forward``),
+    and attends with ``q_offset=start`` so positions past the chunk stay
+    causally masked.
+    """
+    b, c_len, _ = x.shape
+    h = cfg.n_heads
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(c_len, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (b, c_len))
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+    c_new, kr_new = _mla_ckv(params, x, cfg, positions)
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), start, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), start, axis=1)
+    k_nope = nn.einsum("bsr,rhn->bshn", c.astype(x.dtype),
+                       params["w_uk"].astype(x.dtype))
+    v = nn.einsum("bsr,rhv->bshv", c.astype(x.dtype),
+                  params["w_uv"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :].astype(x.dtype),
+                                  (*kr.shape[:2], h, cfg.qk_rope_dim))],
+        axis=-1)
+    out = chunked_attention(q, k, v, causal=cfg.causal, q_offset=start,
+                            chunk_q=cfg.attn_chunk_q,
+                            chunk_kv=cfg.attn_chunk_kv)
+    y = nn.linear(out.reshape(b, c_len, h * cfg.v_head_dim),
+                  params["wo"].astype(x.dtype))
+    return y, {"c": c, "kr": kr}

@@ -593,3 +593,74 @@ def lm_decode(params, token, pos, caches, cfg: ModelConfig):
 
     h = _apply_norm(params["final_norm"], x, cfg)
     return logits_from_hidden(params, h, cfg)[:, 0], new_caches
+
+
+def block_extend(params, x, cfg: ModelConfig, kind: str, cache, start,
+                 moe_layer: bool):
+    """Chunked-prefill step for one block (see ``A.attn_extend``).
+
+    Only full-depth caches can re-enter at an arbitrary position —
+    recurrent/xLSTM state and ring buffers cannot, so those kinds refuse.
+    """
+    if kind in ("rec", "mlstm", "slstm", "local"):
+        raise ValueError(f"block kind {kind!r} does not support chunked "
+                         "prefill (needs a full-depth positional cache)")
+    h = _apply_norm(params["norm1"], x, cfg)
+    if cfg.mla:
+        a, cache = A.mla_extend(params["mixer"], h, cfg, cache, start)
+    else:
+        a, cache = A.attn_extend(params["mixer"], h, cfg, kind, cache, start)
+    if cfg.post_norm:
+        a = _apply_norm(params["post_norm1"], a, cfg)
+    h, x = _add_norm(params["norm2"], a, x, cfg)
+    if moe_layer:
+        f, _ = M.moe_forward(params["moe"], h, cfg)
+    else:
+        f = M.ffn_forward(params["ffn"], h, cfg)
+    if cfg.post_norm:
+        f = _apply_norm(params["post_norm2"], f, cfg)
+    return nn.residual_add(x, f), cache
+
+
+def lm_extend(params, tokens, start, caches, cfg: ModelConfig):
+    """Chunked-prefill step: run a (B, C) token chunk at absolute position
+    ``start`` (traced scalar) against caches already holding [0, start).
+
+    The decode-path twin of ``lm_prefill`` for a mid-sequence chunk:
+    returns (logits (B, C, V), new_caches) — the caller picks the row of
+    the prompt's last real token (chunks may be right-padded to a bucket).
+    """
+    lead, pattern, n_rep, trail = _layer_layout(cfg)
+    lead_f, pat_f, trail_f = _moe_flags(cfg)
+    b, c_len = tokens.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    positions = jnp.broadcast_to(
+        start + jnp.arange(c_len, dtype=jnp.int32)[None, :], (b, c_len))
+    x = embed_inputs(params, tokens, cfg, positions)
+
+    new_caches = {"lead": [], "scan": [], "trail": []}
+    for p, kind, mf, c in zip(params["lead"], lead, lead_f, caches["lead"]):
+        x, c = block_extend(p, x, cfg, kind, c, start, mf)
+        new_caches["lead"].append(c)
+
+    if n_rep:
+        def body(x, sliced):
+            ps, cs = sliced
+            new_cs = []
+            for j, kind in enumerate(pattern):
+                x, c = block_extend(ps[j], x, cfg, kind, cs[j], start,
+                                    pat_f[j])
+                new_cs.append(c)
+            return x, tuple(new_cs)
+
+        x, scan_caches = jax.lax.scan(
+            body, x, (tuple(params["scan"]), tuple(caches["scan"])))
+        new_caches["scan"] = list(scan_caches)
+
+    for p, kind, mf, c in zip(params["trail"], trail, trail_f,
+                              caches["trail"]):
+        x, c = block_extend(p, x, cfg, kind, c, start, mf)
+        new_caches["trail"].append(c)
+
+    h = _apply_norm(params["final_norm"], x, cfg)
+    return logits_from_hidden(params, h, cfg), new_caches

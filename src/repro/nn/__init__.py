@@ -132,6 +132,32 @@ def fake_quant(mode: str = "int8"):
         set_fake_quant(prev)
 
 
+#: debug-mode bounds checking for cache writes (see kv_cache_update):
+#: dynamic_update_slice CLAMPS out-of-range start indices, so a bad block
+#: table or position silently corrupts the last valid row instead of
+#: failing. Flip this on (tests, bring-up) to fail loudly instead.
+_DEBUG_BOUNDS = False
+
+
+def set_debug_bounds(enabled: bool) -> None:
+    global _DEBUG_BOUNDS
+    _DEBUG_BOUNDS = bool(enabled)
+
+
+def debug_bounds_enabled() -> bool:
+    return _DEBUG_BOUNDS
+
+
+@contextlib.contextmanager
+def debug_bounds(enabled: bool = True):
+    prev = debug_bounds_enabled()
+    set_debug_bounds(enabled)
+    try:
+        yield
+    finally:
+        set_debug_bounds(prev)
+
+
 #: monotone per-process invocation counter for tagged ops (see below)
 _CALLS = itertools.count()
 
@@ -308,14 +334,98 @@ def kv_cache_update(cache, new, index):
     ``index`` is either a scalar (all rows write the same position — the
     lockstep decode of a freshly prefilled batch) or a per-row ``(B,)``
     vector (continuous batching: every slot sits at its own position).
+
+    ``dynamic_update_slice`` CLAMPS out-of-range starts, so a stale block
+    table or runaway position would silently overwrite the last valid row.
+    Under ``nn.debug_bounds()`` the index is range-checked instead: a
+    concrete out-of-range index raises ``ValueError`` immediately; a traced
+    one reports through ``jax.debug.callback`` at run time.
     """
     new = new.astype(cache.dtype)
     index = jnp.asarray(index, jnp.int32)
+    if _DEBUG_BOUNDS:
+        _check_cache_index(index, cache.shape[1] - new.shape[1])
     if index.ndim == 0:
         return jax.lax.dynamic_update_slice_in_dim(cache, new, index, axis=1)
     return jax.vmap(
         lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
     )(cache, new, index)
+
+
+def _check_cache_index(index, limit: int) -> None:
+    """Fail loudly when a cache-write start index falls outside [0, limit]."""
+    import numpy as np
+    try:
+        concrete = np.asarray(index)
+    except (jax.errors.TracerArrayConversionError, TypeError):
+        concrete = None
+    if concrete is not None:
+        if concrete.min() < 0 or concrete.max() > limit:
+            raise ValueError(
+                f"kv_cache_update index {concrete!r} outside [0, {limit}]; "
+                "dynamic_update_slice would clamp and corrupt the edge row")
+        return
+
+    def _report(idx, lim):
+        if idx.min() < 0 or idx.max() > lim:
+            raise ValueError(
+                f"kv_cache_update index {idx!r} outside [0, {lim}]")
+
+    jax.debug.callback(_report, index, jnp.int32(limit))
+
+
+@tagged(OpGroup.MEMORY, "paged_kv_gather")
+def paged_kv_gather(pool, block_table, max_len: int):
+    """Gather paged KV blocks into a contiguous (B, max_len, ...) view.
+
+    ``pool`` is (N, bs, ...) — N fixed-size blocks of bs positions each;
+    ``block_table`` is (B, nb) int32 mapping each sequence's logical block
+    slots to pool block ids (0 = the reserved scratch block). The gathered
+    view feeds the unchanged contiguous-cache decode path, which is what
+    makes the paged engine bit-identical to the monolithic one.
+    """
+    bs = pool.shape[1]
+    b, nb = block_table.shape
+    g = jnp.take(pool, block_table.reshape(-1), axis=0)
+    return g.reshape(b, nb * bs, *pool.shape[2:])[:, :max_len]
+
+
+@tagged(OpGroup.MEMORY, "paged_kv_write")
+def paged_kv_write(pool, new, block_table, index):
+    """Scatter one decode row per sequence into its paged block.
+
+    ``new`` is (B, 1, ...); ``index`` (B,) is each sequence's position.
+    Row ``b`` lands in pool block ``block_table[b, index[b] // bs]`` at
+    offset ``index[b] % bs``. Sequences whose table slot is 0 write the
+    reserved scratch block (dead/prefilling slots stay harmless).
+    """
+    bs = pool.shape[1]
+    index = jnp.asarray(index, jnp.int32)
+    block_ids = jnp.take_along_axis(
+        block_table, (index // bs)[:, None], axis=1)[:, 0]
+    return pool.at[block_ids, index % bs].set(new[:, 0].astype(pool.dtype))
+
+
+@tagged(OpGroup.MEMORY, "paged_kv_scatter")
+def paged_kv_scatter(pool, rows, block_table, start, lo, hi):
+    """Scatter a prefill chunk (R, ...) at positions start + arange(R).
+
+    ``block_table`` is one sequence's (nb,) table row. Positions outside
+    [lo, hi) — left overlap with already-cached prefix blocks, right
+    padding past the prompt — divert to the reserved scratch block 0, so
+    chunk buckets never need to match the prompt length exactly.
+    """
+    bs = pool.shape[1]
+    n = pool.shape[0]
+    idx = jnp.asarray(start, jnp.int32) + jnp.arange(rows.shape[0],
+                                                     dtype=jnp.int32)
+    blk = jnp.take(block_table,
+                   jnp.clip(idx // bs, 0, block_table.shape[0] - 1))
+    keep = (idx >= lo) & (idx < hi)
+    flat = jnp.where(keep, blk * bs + idx % bs, idx % bs)
+    out = pool.reshape(n * bs, *pool.shape[2:]).at[flat].set(
+        rows.astype(pool.dtype))
+    return out.reshape(pool.shape)
 
 
 @tagged(OpGroup.MEMORY, "apply_rope")

@@ -276,7 +276,13 @@ class Engine:
         Returns True if the slot is now occupied (False when the request
         completed at admission: single-token budget or immediate EOS).
         """
-        req.admit_t = self.clock()
+        if req.admit_t == 0.0:
+            # first admission only: chunked prefill re-enters _admit-like
+            # paths across several engine steps, and restarting the clock
+            # there would under-report queue wait (and could push the
+            # recorded wait past TTFT). The wait clock runs from submit
+            # (enqueue) to the FIRST admission.
+            req.admit_t = self.clock()
         plen = len(req.prompt)
         bucket = self._bucket(plen)
         toks = np.full((1, bucket), self.pad_id, np.int32)
@@ -336,6 +342,11 @@ class Engine:
         self._pos[slot] = 0
         self._cur[slot] = self.pad_id
 
+    def reset_stats(self) -> None:
+        """Zero the accounting (after warmup/priming runs): load drivers
+        prime the jit caches with dummy requests, then measure cleanly."""
+        self.stats = EngineStats()
+
     # -- stepping ----------------------------------------------------------
     @property
     def active(self) -> int:
@@ -388,3 +399,12 @@ class Engine:
         while self.queue or self.active:
             finished.extend(self.step())
         return finished
+
+
+from repro.serving.paged import (BlockAllocator, PagedEngine,  # noqa: E402
+                                 PrefixCache)
+
+__all__ = [
+    "Engine", "EngineStats", "Request", "make_prefill_step",
+    "make_serve_step", "BlockAllocator", "PagedEngine", "PrefixCache",
+]

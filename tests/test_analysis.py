@@ -52,9 +52,9 @@ def _run(rule_id, ctx):
 # registry
 # ---------------------------------------------------------------------------
 
-def test_all_eight_builtin_rules_registered():
+def test_all_nine_builtin_rules_registered():
     ids = [r.id for r in all_rules()]
-    assert [f"NG{i:03d}" for i in range(1, 9)] == ids
+    assert [f"NG{i:03d}" for i in range(1, 10)] == ids
 
 
 def test_register_rule_rejects_duplicate_id():
@@ -323,6 +323,24 @@ def test_ng008_silent_without_baseline_entry_or_within_tolerance():
     ctx = _ctx([], group_shares={"gemm": 0.51},
                baseline_shares={"gemm": 0.50}, share_tolerance=0.03)
     assert _run("NG008", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# NG009 — paged-KV bookkeeping ops in MEMORY with nonzero bytes (static)
+# ---------------------------------------------------------------------------
+
+def test_ng009_clean_on_this_repo():
+    assert run_static_rules(rules=[get_rule("NG009")]) == []
+
+
+def test_ng009_flags_untagged_paged_op(monkeypatch):
+    # strip the taxonomy tag off one paged op: the rule must notice the
+    # op_site vanished from the captured stream
+    monkeypatch.setattr(nn, "paged_kv_gather",
+                        nn.paged_kv_gather.__wrapped__)
+    out = run_static_rules(rules=[get_rule("NG009")])
+    assert any("paged_kv_gather" in f.where and "tag" in f.message
+               for f in out)
 
 
 # ---------------------------------------------------------------------------

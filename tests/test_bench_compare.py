@@ -132,6 +132,44 @@ def test_unmeasured_eager_us_baseline_not_flagged():
     assert regressions(old, new, time_tolerance=3.0)
 
 
+def test_traffic_invariant_rechecked_on_candidate():
+    """The traffic invariant gates the *candidate* artifact itself, even
+    when baseline and candidate are identical."""
+    from test_bench_schema import traffic_rows_ok
+
+    def with_traffic():
+        a = make_artifact()
+        a.sections.append(SectionResult(name="traffic", title="§Traffic",
+                                        status="ok", wall_s=3.0,
+                                        rows=traffic_rows_ok()))
+        return a
+
+    old, new = with_traffic(), with_traffic()
+    assert regressions(old, new) == []
+
+    new.section("traffic").rows[0]["parity_ok"] = False
+    out = regressions(old, new)
+    assert any("bit-identical" in f.message for f in out)
+
+    old2, new2 = with_traffic(), with_traffic()
+    new2.section("traffic").rows[2]["warm_service_ttft_s"] = 0.5
+    assert any("not below" in f.message for f in regressions(old2, new2))
+
+
+def test_traffic_table_rendered_in_summary():
+    from test_bench_schema import traffic_rows_ok
+
+    from repro.bench.compare import render_summary_markdown
+
+    new = make_artifact()
+    new.sections.append(SectionResult(name="traffic", title="§Traffic",
+                                      status="ok", wall_s=3.0,
+                                      rows=traffic_rows_ok()))
+    text = render_summary_markdown(make_artifact(), new, [])
+    assert "### traffic" in text
+    assert "| t | parity |" in text and "| t | profile |" in text
+
+
 def test_cli_exit_codes(tmp_path, capsys):
     old, new = make_artifact(), make_artifact()
     old_p, new_p = str(tmp_path / "old.json"), str(tmp_path / "new.json")

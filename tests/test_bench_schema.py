@@ -6,7 +6,7 @@ import pytest
 
 from repro.bench.schema import (SCHEMA_VERSION, BenchCase, BenchResult,
                                 SectionResult, SchemaError,
-                                validate_artifact)
+                                check_traffic_invariant, validate_artifact)
 
 
 def make_result() -> BenchResult:
@@ -104,6 +104,58 @@ def test_skipped_section_rows_not_key_checked():
     d = make_result().to_dict()
     assert d["sections"][2]["status"] == "skipped"
     assert validate_artifact(d) == []
+
+
+def traffic_rows_ok() -> list:
+    """A traffic section satisfying every clause of the invariant."""
+    return [
+        {"case": "t", "phase": "parity", "parity_ok": True, "requests": 8},
+        {"case": "t", "phase": "load", "trace": "poisson",
+         "goodput_tok_per_s": 100.0, "p99_ttft_s": 0.01},
+        {"case": "t", "phase": "prefix", "hit_rate": 0.5,
+         "warm_service_ttft_s": 0.004, "cold_service_ttft_s": 0.009,
+         "parity_ok": True},
+        {"case": "t", "phase": "profile", "mode": "eager_a100",
+         "total_s": 0.002, "gemm_frac": 0.1, "nongemm_frac": 0.9,
+         "group_fracs": {"memory": 0.6}, "memory_frac": 0.6,
+         "paged_frac": 0.3, "n_ops": 10},
+    ]
+
+
+def test_traffic_invariant_clean():
+    assert check_traffic_invariant(traffic_rows_ok()) == []
+
+
+@pytest.mark.parametrize("mutate,fragment", [
+    (lambda rows: rows[0].update(parity_ok=False), "not bit-identical"),
+    (lambda rows: rows[2].update(hit_rate=0.0), "hit_rate"),
+    (lambda rows: rows[2].update(warm_service_ttft_s=0.02), "not below"),
+    (lambda rows: rows[2].update(parity_ok=None), "prefix-cached outputs"),
+    (lambda rows: rows[3]["group_fracs"].update(memory=0.0), "MEMORY-group"),
+    (lambda rows: rows[3].update(paged_frac=0.0), "paged_frac"),
+    (lambda rows: rows.pop(0), "missing phase"),
+])
+def test_traffic_invariant_catches(mutate, fragment):
+    rows = traffic_rows_ok()
+    mutate(rows)
+    violations = check_traffic_invariant(rows)
+    assert violations and any(fragment in m for _, m in violations), \
+        violations
+
+
+def test_traffic_section_validates_in_artifact():
+    r = make_result()
+    r.sections.append(SectionResult(name="traffic", title="§Traffic",
+                                    status="ok", wall_s=3.0,
+                                    rows=traffic_rows_ok()))
+    d = r.to_dict()
+    assert validate_artifact(d) == []
+    # a traffic row missing its key, or with an out-of-range share, fails
+    d["sections"][-1]["rows"][0].pop("phase")
+    d["sections"][-1]["rows"][-1]["nongemm_frac"] = 1.7
+    errs = validate_artifact(d)
+    assert any("'phase'" in e for e in errs)
+    assert any("outside" in e for e in errs)
 
 
 def test_renderers_accept_artifact_dict():

@@ -1,0 +1,274 @@
+"""Paged-KV serving engine: allocator/prefix-cache units, bit-parity with
+the contiguous engine, chunked prefill, and the kv_cache_update bounds +
+queue-wait-clock regression tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.configs import get_config, reduced
+from repro.models import init_lm
+from repro.serving import BlockAllocator, Engine, PagedEngine, PrefixCache
+
+
+def tiny_cfg():
+    return reduced(get_config("granite-3-8b")).replace(
+        n_layers=2, loss_chunk=0)
+
+
+@pytest.fixture(scope="module")
+def paged_model():
+    cfg = tiny_cfg()
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def mk_paged(cfg, params, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    return PagedEngine(cfg, params, **kw)
+
+
+def run_both(cfg, params, prompts_and_budgets, **paged_kw):
+    """Same requests through the contiguous and paged engines; returns
+    (ref_outputs, paged_outputs, paged_engine) keyed by uid."""
+    ref = Engine(cfg, params, max_batch=paged_kw.get("max_batch", 3),
+                 max_len=paged_kw.get("max_len", 64))
+    paged = mk_paged(cfg, params, **paged_kw)
+    for prompt, budget in prompts_and_budgets:
+        ref.add_request(prompt, max_new_tokens=budget)
+        paged.add_request(prompt, max_new_tokens=budget)
+    ref_out = {r.uid: r.output for r in ref.run()}
+    paged_out = {r.uid: r.output for r in paged.run()}
+    return ref_out, paged_out, paged
+
+
+# -- BlockAllocator --------------------------------------------------------
+
+def test_allocator_reserves_scratch_and_recycles():
+    a = BlockAllocator(num_blocks=5, block_size=8)
+    assert a.free_blocks == 4                      # block 0 is scratch
+    blocks = a.allocate(4)
+    assert 0 not in blocks and len(set(blocks)) == 4
+    assert a.free_blocks == 0
+    for b in blocks:
+        a.decref(b)
+    assert a.free_blocks == 4
+    # refcounted sharing: the block frees only at the last decref
+    b = a.allocate(1)[0]
+    a.incref(b)
+    a.decref(b)
+    assert a.free_blocks == 3
+    a.decref(b)
+    assert a.free_blocks == 4
+
+
+def test_allocator_exhaustion_raises():
+    a = BlockAllocator(num_blocks=3, block_size=8)
+    a.allocate(2)
+    assert a.try_allocate() is None
+    with pytest.raises(RuntimeError):
+        a.allocate(1)
+    with pytest.raises(ValueError):
+        BlockAllocator(num_blocks=1, block_size=8)
+
+
+# -- PrefixCache -----------------------------------------------------------
+
+def test_prefix_cache_lookup_caps_and_refcounts():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    c = PrefixCache(a)
+    prompt = list(range(1, 13))                    # 12 tokens = 3 blocks
+    blocks = a.allocate(3)
+    c.insert(prompt, blocks)
+    assert len(c) == 3
+    # the sequence finished: the cache becomes the blocks' only holder
+    for b in blocks:
+        a.decref(b)
+
+    # full-prompt hit is capped: >= 1 suffix token must still prefill
+    cached, reused = c.lookup(prompt)
+    assert cached == 8 and reused == blocks[:2]
+    for b in reused:
+        a.decref(b)
+
+    # an unrelated prompt misses entirely
+    cached, reused = c.lookup([99, 98, 97, 96, 95])
+    assert cached == 0 and reused == []
+    assert c.hit_rate == pytest.approx(0.5)
+
+    # eviction only touches entries nobody references
+    free_before = a.free_blocks
+    cached, reused = c.lookup(prompt)              # pins blocks[0:2]
+    assert c.evict_one()                           # drops the unpinned tail
+    assert a.free_blocks == free_before + 1
+    for b in reused:
+        a.decref(b)
+
+
+def test_prefix_cache_insert_keeps_existing_entries():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    c = PrefixCache(a)
+    prompt = list(range(1, 9))
+    first = a.allocate(2)
+    c.insert(prompt, first)
+    second = a.allocate(2)
+    c.insert(prompt, second)                       # duplicates: no-op
+    cached, reused = c.lookup(prompt + [42, 43, 44, 45])
+    assert reused == first[:2]
+
+
+# -- parity with the contiguous engine (ISSUE acceptance) ------------------
+
+def test_paged_parity_mixed_lengths(paged_model):
+    """Paged engine outputs are bit-identical to the contiguous engine's
+    across mixed prompt lengths and budgets, with more requests than
+    slots (EOS-free continuous batching refill)."""
+    cfg, params = paged_model
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(1, cfg.vocab_size, size=rng.randint(3, 41)).tolist(),
+             int(rng.randint(2, 9))) for _ in range(8)]
+    ref_out, paged_out, eng = run_both(cfg, params, reqs)
+    assert paged_out == ref_out
+    # every allocated block came back when its sequence finished
+    assert eng.allocator.free_blocks + len(eng.prefix_cache) == \
+        eng.allocator.num_blocks - 1
+
+
+def test_paged_parity_chunked_prefill(paged_model):
+    """Long prompts admitted as decode-interleaved chunks (including the
+    unbucketed final chunk at the context edge) stay bit-identical."""
+    cfg, params = paged_model
+    rng = np.random.RandomState(1)
+    reqs = [(rng.randint(1, cfg.vocab_size, size=n).tolist(), 4)
+            for n in (3, 17, 33, 40, 23, 9)]
+    ref_out, paged_out, _ = run_both(cfg, params, reqs, chunk_size=16)
+    assert paged_out == ref_out
+
+
+def test_paged_parity_prefix_cache_hits(paged_model):
+    """Shared-prefix requests reuse cached blocks (hit rate > 0) without
+    changing a single output bit vs the cache-disabled engine."""
+    cfg, params = paged_model
+    rng = np.random.RandomState(2)
+    prefix = rng.randint(1, cfg.vocab_size, size=24).tolist()
+    reqs = [(prefix + rng.randint(1, cfg.vocab_size, size=6).tolist(), 3)
+            for _ in range(4)]
+
+    cold = mk_paged(cfg, params, chunk_size=16, prefix_caching=False)
+    warm = mk_paged(cfg, params, chunk_size=16, prefix_caching=True)
+    for prompt, budget in reqs:
+        cold.add_request(prompt, max_new_tokens=budget)
+        warm.add_request(prompt, max_new_tokens=budget)
+    cold_out = {r.uid: r.output for r in cold.run()}
+    warm_out = {r.uid: r.output for r in warm.run()}
+    assert warm_out == cold_out
+    assert warm.prefix_cache.hit_rate > 0
+    assert cold.prefix_cache is None
+
+
+def test_paged_eos_frees_blocks_for_refill(paged_model):
+    """A request dying at admission (EOS on its first token) must release
+    its blocks and refill the slot from the queue in the same pass."""
+    cfg, params = paged_model
+    probe = mk_paged(cfg, params, max_batch=1)
+    probe.add_request([5, 6, 7], max_new_tokens=4)
+    eos = probe.run()[0].output[0]
+
+    eng = mk_paged(cfg, params, max_batch=2, eos_id=eos,
+                   prefix_caching=False)
+    eng.add_request([5, 6, 7], max_new_tokens=8)       # dies at admission
+    for i in range(4):
+        eng.add_request([1 + i, 2 + i, 3 + i, 4 + i], max_new_tokens=3)
+    done = eng.run()
+    assert len(done) == 5 and all(r.done for r in done)
+    assert next(r for r in done if r.uid == 1).output == [eos]
+    assert eng.allocator.free_blocks == eng.allocator.num_blocks - 1
+
+
+def test_paged_rejects_non_attention_mixers():
+    cfg = reduced(get_config("recurrentgemma-2b")).replace(loss_chunk=0)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        PagedEngine(cfg, params, max_batch=2, max_len=64)
+
+
+# -- satellite 2: queue-wait clock ----------------------------------------
+
+def test_chunked_prefill_does_not_restart_queue_wait_clock(paged_model):
+    """admit_t is stamped once, at first admission — the chunked-prefill
+    path must not restart it on later chunks, or queue_wait absorbs
+    prefill time and TTFT < queue_wait becomes representable."""
+    cfg, params = paged_model
+    eng = mk_paged(cfg, params, max_batch=1, chunk_size=8)
+    prompt = np.random.RandomState(3).randint(
+        1, cfg.vocab_size, size=30).tolist()        # 4 chunks of 8
+    eng.add_request(prompt, max_new_tokens=3)
+    eng.step()                                       # admits: chunk 1 only
+    req = next(r for r in eng.slots if r is not None)
+    assert req.admit_t > 0.0
+    admit_t = req.admit_t
+    done = eng.run()
+    assert done[0].admit_t == admit_t                # never restamped
+    assert done[0].first_token_t >= admit_t >= done[0].enqueue_t
+
+
+def test_stats_invariant_ttft_covers_queue_wait(paged_model):
+    """For every finished request, TTFT >= queue wait (both clocks start
+    at enqueue; the first token cannot precede admission)."""
+    cfg, params = paged_model
+    eng = mk_paged(cfg, params, max_batch=2, chunk_size=16)
+    rng = np.random.RandomState(4)
+    for _ in range(6):
+        plen = int(rng.randint(3, 36))
+        eng.add_request(rng.randint(1, cfg.vocab_size, size=plen).tolist(),
+                        max_new_tokens=int(rng.randint(2, 5)))
+    done = eng.run()
+    assert len(done) == 6
+    for r in done:
+        assert r.ttft_s >= r.queue_wait_s >= 0.0
+    assert eng.stats.mean_ttft_s >= eng.stats.mean_queue_wait_s
+
+
+# -- satellite 1: kv_cache_update bounds check ----------------------------
+
+def test_kv_cache_update_clamps_silently_without_debug():
+    cache = jnp.zeros((1, 4, 2))
+    new = jnp.ones((1, 1, 2))
+    out = nn.kv_cache_update(cache, new, jnp.array([99], jnp.int32))
+    # dynamic_update_slice clamps: the write lands on the LAST row
+    assert float(out[0, 3, 0]) == 1.0
+
+
+def test_kv_cache_update_debug_bounds_rejects_concrete_oob():
+    cache = jnp.zeros((1, 4, 2))
+    new = jnp.ones((1, 1, 2))
+    with nn.debug_bounds():
+        # in-range still works
+        out = nn.kv_cache_update(cache, new, jnp.array([2], jnp.int32))
+        assert float(out[0, 2, 0]) == 1.0
+        with pytest.raises(ValueError, match="clamp"):
+            nn.kv_cache_update(cache, new, jnp.array([99], jnp.int32))
+        with pytest.raises(ValueError, match="clamp"):
+            nn.kv_cache_update(cache, new, jnp.array([-1], jnp.int32))
+    # the context manager restores the silent-clamp default
+    assert not nn.debug_bounds_enabled()
+    nn.kv_cache_update(cache, new, jnp.array([99], jnp.int32))
+
+
+def test_kv_cache_update_debug_bounds_rejects_traced_oob():
+    cache = jnp.zeros((1, 4, 2))
+    new = jnp.ones((1, 1, 2))
+
+    def write(idx):
+        return nn.kv_cache_update(cache, new, idx)
+
+    with nn.debug_bounds():
+        fn = jax.jit(write)
+        # jax.debug.callback surfaces the ValueError as a runtime error
+        with pytest.raises(Exception, match="kv_cache_update|callback"):
+            jax.block_until_ready(fn(jnp.array([99], jnp.int32)))
+        out = jax.block_until_ready(fn(jnp.array([1], jnp.int32)))
+        assert float(out[0, 1, 0]) == 1.0
