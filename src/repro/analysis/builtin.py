@@ -1,4 +1,4 @@
-"""The built-in nglint rules (NG001–NG009).
+"""The built-in nglint rules (NG001–NG010).
 
 Each rule polices one invariant the repro's headline numbers depend on:
 
@@ -23,6 +23,10 @@ NG008  per-group latency shares stay within tolerance of the committed
 NG009  the paged-KV bookkeeping ops (block-table gather / scatter /
        per-slot write) classify as ``OpGroup.MEMORY`` with nonzero
        modeled bytes — the "NonGEMM share of serving" depends on it
+NG010  collective primitives in captured shard_map graphs (the manual-TP
+       ``nn.tp_psum`` / ``nn.tp_vocab_gather`` sites) classify as
+       ``OpGroup.COLLECTIVE`` with nonzero modeled bytes — the
+       ``serving_sharded`` COLLECTIVE horizon depends on it
 ====== ===================================================================
 
 Rules are registered on import (`repro.analysis` imports this module).
@@ -436,6 +440,90 @@ def check_paged_kv_ops(_ctx: Optional[AnalysisContext]):
                         "roofline and share",
                 fix_hint="extend estimate_bytes in repro/core/graph.py "
                          "for the slicing/scatter primitives involved")
+
+
+# ---------------------------------------------------------------------------
+# NG010 — manual-TP collectives land in COLLECTIVE with nonzero bytes (static)
+# ---------------------------------------------------------------------------
+
+@rule("NG010", "manual-TP collectives classify as COLLECTIVE with bytes",
+      severity="error", scope="static")
+def check_tp_collectives(_ctx: Optional[AnalysisContext]):
+    """Captures a tiny shard_map program over the manual-TP collective
+    sites (a 1-device mesh suffices: ``psum`` / ``all_gather`` bind in the
+    traced jaxpr regardless of axis size) and asserts every collective
+    record classifies as ``OpGroup.COLLECTIVE`` with modeled bytes > 0 —
+    if the per-block all-reduces of a tensor-parallel decode fall out of
+    COLLECTIVE (or model zero link traffic), the ``serving_sharded``
+    section's COLLECTIVE share silently flatlines."""
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro import nn, sharding
+    from repro.core.graph import capture
+    from repro.core.taxonomy import COLLECTIVE_PRIMS
+    from repro.launch.mesh import make_sim_mesh
+
+    mesh = make_sim_mesh(1, 1)
+
+    def body(x, w):
+        with sharding.manual_axis("model", vocab_sharded=True):
+            y = nn.linear(x, w)
+            y = nn.tp_psum(y)        # row-sharded partial-sum reduction
+            return nn.tp_vocab_gather(y)   # vocab-sharded logit gather
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                   check_rep=False)
+    records = capture(fn, jnp.ones((2, 8), jnp.float32),
+                      jnp.ones((8, 8), jnp.float32))
+
+    for site in ("psum", "all_gather"):
+        tagged = [r for r in records if r.op_site == site]
+        where = f"nn.tp_{'vocab_gather' if site == 'all_gather' else site}"
+        if not tagged:
+            yield Finding(
+                rule="NG010", severity="error", workload="static",
+                where=where,
+                message=f"no captured record carries op_site {site!r} — "
+                        "the collective site emitted nothing inside a "
+                        "manual_axis context, so TP traces carry no "
+                        "COLLECTIVE records",
+                fix_hint="keep the ng:collective scope_tag and the "
+                         "jax.lax collective call in the nn site")
+            continue
+        off_group = sorted({r.prim for r in tagged
+                            if r.group is not OpGroup.COLLECTIVE})
+        if off_group:
+            yield Finding(
+                rule="NG010", severity="error", workload="static",
+                where=where,
+                message=f"record(s) {off_group} inside the {site!r} site "
+                        "classify outside OpGroup.COLLECTIVE — TP "
+                        "all-reduce latency would be billed to HBM "
+                        "instead of link_bw",
+                fix_hint="tag the site OpGroup.COLLECTIVE and keep its "
+                         "primitives in taxonomy's COLLECTIVE set")
+        if sum(r.bytes_accessed for r in tagged) <= 0.0:
+            yield Finding(
+                rule="NG010", severity="error", workload="static",
+                where=where,
+                message=f"{site!r} records model zero bytes_accessed — "
+                        "the collective's link traffic vanishes from the "
+                        "roofline and the COLLECTIVE share",
+                fix_hint="extend estimate_bytes in repro/core/graph.py "
+                         "for the collective primitives involved")
+    untagged = sorted({r.prim for r in records
+                       if r.prim in COLLECTIVE_PRIMS
+                       and r.group is not OpGroup.COLLECTIVE})
+    if untagged:
+        yield Finding(
+            rule="NG010", severity="error", workload="static",
+            where="shard_map capture",
+            message=f"collective primitive(s) {untagged} classify outside "
+                    "OpGroup.COLLECTIVE in a captured shard_map graph",
+            fix_hint="keep every collective primitive registered under "
+                     "OpGroup.COLLECTIVE in repro/core/taxonomy.py")
 
 
 #: Mapping rule id -> short description, for docs / --list-rules

@@ -46,6 +46,13 @@ TRAFFIC_CASES: List[BenchCase] = [
     BenchCase("traffic stablelm b-3", "stablelm-3b", 3, 64, _Q),
 ]
 
+#: sharded-serving case: the paged engine's manual-TP sweep over simulated
+#: host devices (the section runs scripts/sharded_serving_check.py in a
+#: subprocess — device count is process-global)
+SHARDED_CASES: List[BenchCase] = [
+    BenchCase("sharded stablelm b-4", "stablelm-3b", 4, 64, _Q),
+]
+
 #: vision cases (paper's Torchvision half): seq is the encoder token
 #: count, derived from the config's patch grid so the case can never
 #: drift from what vision_case_workload actually builds (the detector's
@@ -136,6 +143,14 @@ def serving_config(arch: str):
     from repro.configs import get_config as _get, reduced
     cfg = reduced(_get(arch))
     return cfg.replace(n_layers=min(cfg.n_layers, 2), loss_chunk=0)
+
+
+def sharded_serving_config(arch: str):
+    """:func:`serving_config` widened to 8 heads at the same ``d_model`` so
+    the TP sweep divides evenly up to tp=8 (``d_ff`` and ``vocab_size`` of
+    the reduced configs already do)."""
+    cfg = serving_config(arch)
+    return cfg.replace(n_heads=8, n_kv_heads=8, head_dim=cfg.d_model // 8)
 
 
 @functools.lru_cache(maxsize=None)

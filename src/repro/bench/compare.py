@@ -48,7 +48,12 @@ Five invariants are re-checked on the *candidate* artifact itself
                       must hit the prefix cache with warm service TTFT below
                       the cold run's, and the paged decode profile must
                       report a nonzero MEMORY-group / paged-bookkeeping
-                      share.
+                      share;
+  * serving_sharded — the manual-TP paged engine must keep token parity
+                      with the single-device engine across the whole TP
+                      sweep, with a strictly growing COLLECTIVE share and
+                      a modeled per-device scaling efficiency inside the
+                      stated band.
 
 Rows present only in the *new* artifact are additions, never regressions.
 Exit codes: 0 clean, 1 regressions found, 2 bad input.
@@ -64,7 +69,8 @@ from typing import Dict, List, Optional, Tuple
 
 from .schema import (SHARE_SECTIONS, BenchResult, SchemaError,
                      check_fusion_invariant, check_platforms_invariant,
-                     check_traffic_invariant, check_vision_invariant)
+                     check_sharded_invariant, check_traffic_invariant,
+                     check_vision_invariant)
 
 SHARE_KEYS = ("gemm_frac", "nongemm_frac")
 
@@ -75,6 +81,7 @@ MODELED_KEYS = {
     "kernels": ("eager_mb", "xla_mb", "pallas_mb"),
     "roofline": ("compute_s", "memory_s", "collective_s", "mfu",
                  "useful_ratio"),
+    "serving_sharded": ("modeled_step_s", "modeled_eff", "collective_frac"),
 }
 
 #: measured (noisy) quantities -> only gated under --time-tolerance
@@ -93,6 +100,7 @@ ROW_KEYS = {
     "kernels": ("site",),
     "roofline": ("arch", "shape", "mesh", "label", "model"),
     "serving": ("case", "phase"),
+    "serving_sharded": ("case", "tp"),
     "traffic": ("case", "phase"),
     "quantized": ("case", "mode", "variant"),
     "fusion": ("case", "mode", "variant"),
@@ -141,6 +149,16 @@ def _check_traffic_direction(sec, findings: List["Finding"]) -> None:
     MEMORY bookkeeping share) — the same ``check_traffic_invariant`` the
     traffic section gates itself with."""
     for where, message in check_traffic_invariant(sec.rows):
+        findings.append(Finding("regression", where, message))
+
+
+def _check_sharded_direction(sec, findings: List["Finding"]) -> None:
+    """Sharded-serving invariant on the *new* artifact (token parity with
+    the single-device engine across the TP sweep, strictly growing
+    COLLECTIVE share, modeled scaling efficiency in band) — the same
+    ``check_sharded_invariant`` the serving_sharded section gates itself
+    with."""
+    for where, message in check_sharded_invariant(sec.rows):
         findings.append(Finding("regression", where, message))
 
 
@@ -321,6 +339,9 @@ def compare_artifacts(old: BenchResult, new: BenchResult,
     tr = new.section("traffic")
     if tr is not None and tr.status == "ok":
         _check_traffic_direction(tr, findings)
+    sh = new.section("serving_sharded")
+    if sh is not None and sh.status == "ok":
+        _check_sharded_direction(sh, findings)
     return findings
 
 
@@ -429,6 +450,27 @@ def render_summary_markdown(old: BenchResult, new: BenchResult,
                 f"| {100*float(r.get('gemm_frac', 0.0)):.1f} "
                 f"| {100*float(r.get('nongemm_frac', 0.0)):.1f} "
                 f"| {drift_cell} |")
+    sh = new.section("serving_sharded")
+    if sh is not None and sh.status == "ok" and sh.rows:
+        lines += [
+            "",
+            "### serving_sharded (TP scaling: per-device throughput and "
+            "COLLECTIVE share, candidate)",
+            "",
+            "| case | tp | devices | tok/s | tok/s/device | modeled step "
+            "| eff | COLLECTIVE% | parity |",
+            "|---|---:|---:|---:|---:|---:|---:|---:|---|",
+        ]
+        for r in sh.rows:
+            parity = r.get("parity_ok")
+            lines.append(
+                f"| {r.get('case')} | {r.get('tp')} | {r.get('devices')} "
+                f"| {float(r.get('decode_tok_per_s', 0.0)):.1f} "
+                f"| {float(r.get('per_device_tok_per_s', 0.0)):.1f} "
+                f"| {float(r.get('modeled_step_s', 0.0))*1e6:.2f}us "
+                f"| {float(r.get('modeled_eff', 0.0)):.3f} "
+                f"| {100*float(r.get('collective_frac', 0.0)):.1f} "
+                f"| {'✅' if parity is True else '❌' if parity is False else '—'} |")
     return "\n".join(lines) + "\n"
 
 

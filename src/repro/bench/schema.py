@@ -41,7 +41,8 @@ KNOWN_TIERS = ("quick", "full")
 #: sections whose rows carry GEMM/NonGEMM shares (validated to [0, 1] when
 #: present; the serving section's "engine" rows carry throughput instead)
 SHARE_SECTIONS = ("breakdown", "opgroups", "top_table", "serving",
-                  "quantized", "fusion", "vision", "platforms", "traffic")
+                  "quantized", "fusion", "vision", "platforms", "traffic",
+                  "serving_sharded")
 
 #: fusion section (paper §6): unfused variant -> its fused twin, per
 #: (case, mode). Both the section's own gate (repro.bench.sections) and
@@ -250,6 +251,95 @@ def check_traffic_invariant(rows: Sequence[dict]) -> List[tuple]:
     return violations
 
 
+#: the TP degrees the serving_sharded section sweeps (simulated host
+#: devices; the subprocess pins 8 via XLA_FLAGS)
+SHARDED_TP_SWEEP = (1, 2, 4, 8)
+
+#: scaling-efficiency band for the modeled per-device decode step:
+#: eff(tp) = t_model(1) / (tp * t_model(tp)) must stay at or above this
+#: floor for every TP degree in the sweep (and never exceed 1 + slack —
+#: super-linear modeled scaling would mean the capture lost work). The
+#: floor is generous because the reduced-size bench model keeps full
+#: d_model activations (norms, residuals) and the constant-size psum
+#: payload on every device while the GEMM work shrinks by 1/tp.
+SHARDED_EFF_FLOOR = 0.5
+SHARDED_EFF_CEIL = 1.02
+
+
+def check_sharded_invariant(rows: Sequence[dict]) -> List[tuple]:
+    """The mesh-sharded serving invariant over serving_sharded rows.
+
+    Single implementation shared by the section's own gate
+    (``repro.bench.sections.sharded_rows`` raises on any violation) and
+    the compare CLI (regression Findings on the candidate artifact).
+    Per case, over the :data:`SHARDED_TP_SWEEP` rows:
+
+    * every TP degree of the sweep is present;
+    * ``parity_ok`` is true on every row — the manual-TP engine must emit
+      token streams identical to the single-device paged engine;
+    * the tp=1 row has zero COLLECTIVE share and every tp>1 row a strictly
+      positive one, strictly increasing with the TP degree — the
+      communication horizon must appear, and grow, as the GEMM work
+      per device shrinks;
+    * ``modeled_eff`` stays within [:data:`SHARDED_EFF_FLOOR`,
+      :data:`SHARDED_EFF_CEIL`] on every row.
+    """
+    violations: List[tuple] = []
+    by_case: Dict[str, Dict[int, dict]] = {}
+    for row in rows:
+        tp = row.get("tp")
+        if not isinstance(tp, int):
+            violations.append((f"serving_sharded[{row.get('case')}]",
+                               f"'tp' must be an int, got {tp!r}"))
+            continue
+        by_case.setdefault(str(row.get("case")), {})[tp] = row
+    for case, by_tp in sorted(by_case.items()):
+        where = f"serving_sharded[{case}]"
+        missing = [t for t in SHARDED_TP_SWEEP if t not in by_tp]
+        if missing:
+            violations.append((where, (
+                f"missing TP degrees {missing} (sweep requires all of "
+                f"{list(SHARDED_TP_SWEEP)})")))
+            continue
+        prev_coll = None
+        for tp in SHARDED_TP_SWEEP:
+            row = by_tp[tp]
+            rwhere = f"{where} tp={tp}"
+            if row.get("parity_ok") is not True:
+                violations.append((rwhere, (
+                    "sharded token streams are not identical to the "
+                    "single-device paged engine's (parity_ok is "
+                    f"{row.get('parity_ok')!r})")))
+            coll = row.get("collective_frac")
+            if not _is_num(coll):
+                violations.append((rwhere,
+                                   f"collective_frac is {coll!r}"))
+                continue
+            coll = float(coll)
+            if tp == 1 and coll != 0.0:
+                violations.append((rwhere, (
+                    f"collective_frac {coll:.4f} on one device — a "
+                    f"single-device capture must contain no collectives")))
+            if tp > 1 and not coll > 0.0:
+                violations.append((rwhere, (
+                    f"collective_frac is {coll:.4f} — the TP decode step "
+                    f"must spend a nonzero share on COLLECTIVE ops")))
+            if prev_coll is not None and not coll > prev_coll:
+                violations.append((rwhere, (
+                    f"collective_frac {coll:.4f} did not grow over the "
+                    f"previous TP degree's {prev_coll:.4f} — the "
+                    f"communication share must rise with TP")))
+            prev_coll = coll
+            eff = row.get("modeled_eff")
+            if not _is_num(eff):
+                violations.append((rwhere, f"modeled_eff is {eff!r}"))
+            elif not SHARDED_EFF_FLOOR <= float(eff) <= SHARDED_EFF_CEIL:
+                violations.append((rwhere, (
+                    f"modeled per-device scaling efficiency {eff:.4f} "
+                    f"outside [{SHARDED_EFF_FLOOR}, {SHARDED_EFF_CEIL}]")))
+    return violations
+
+
 def check_platforms_invariant(rows: Sequence[dict]) -> List[tuple]:
     """The cross-platform invariant over platforms-section rows.
 
@@ -354,6 +444,9 @@ SECTION_ROW_KEYS: Dict[str, Sequence[str]] = {
                "nongemm_frac", "group_fracs", "roi_frac", "interp_frac"),
     "platforms": ("case", "platform", "kind", "mode", "total_s", "gemm_s",
                   "gemm_frac", "nongemm_frac", "group_fracs"),
+    "serving_sharded": ("case", "tp", "devices", "decode_tok_per_s",
+                        "per_device_tok_per_s", "modeled_step_s",
+                        "modeled_eff", "collective_frac", "parity_ok"),
 }
 
 

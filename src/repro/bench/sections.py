@@ -23,8 +23,8 @@ from .cases import (SERVING_CASES, TRAFFIC_CASES, VISION_CASES, build,
                     profile_case_quantized, profile_case_vision, tier_cases)
 from .runner import BenchContext, SkipSection, register_section
 from .schema import (BenchCase, check_fusion_invariant,
-                     check_platforms_invariant, check_traffic_invariant,
-                     check_vision_invariant)
+                     check_platforms_invariant, check_sharded_invariant,
+                     check_traffic_invariant, check_vision_invariant)
 
 
 def _results_root() -> str:
@@ -699,6 +699,67 @@ def section_traffic(ctx: BenchContext) -> List[dict]:
     for c in cases:
         rows += traffic_rows(c)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# §Sharded serving — mesh-sharded paged decode: the COMMUNICATION horizon
+# ---------------------------------------------------------------------------
+
+def sharded_rows(timeout_s: float = 540.0) -> List[dict]:
+    """TP-sweep rows for the mesh-sharded paged engine, gated by the same
+    ``check_sharded_invariant`` the compare CLI re-runs on candidates.
+
+    The sweep needs 8 simulated host devices, and the XLA device count is
+    process-global (locked at the first jax init) — so the work runs in
+    ``scripts/sharded_serving_check.py bench`` as a subprocess, which pins
+    ``--xla_force_host_platform_device_count=8`` before importing jax and
+    prints one ``BENCH_JSON`` line. Per TP degree in
+    :data:`~repro.bench.schema.SHARDED_TP_SWEEP`: measured engine
+    throughput, token parity vs the single-device paged engine, and the
+    modeled per-device decode step (captured THROUGH shard_map, so the
+    psum/all_gather collectives appear as COLLECTIVE records billed
+    against ``link_bw``).
+    """
+    import subprocess
+    import sys
+
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+    script = os.path.join(repo, "scripts", "sharded_serving_check.py")
+    if not os.path.exists(script):
+        raise SkipSection("scripts/sharded_serving_check.py not found "
+                          "(bench running outside a checkout)")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src") + os.pathsep +
+               os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)     # the script pins its own device count
+    r = subprocess.run([sys.executable, script, "bench"],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout_s)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded_serving_check bench failed (rc={r.returncode}):\n"
+            f"{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+    rows = None
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            rows = json.loads(line[len("BENCH_JSON "):])
+    if rows is None:
+        raise RuntimeError("sharded_serving_check printed no BENCH_JSON "
+                           f"line:\n{r.stdout[-2000:]}")
+    violations = check_sharded_invariant(rows)
+    if violations:
+        raise AssertionError("; ".join(f"{w}: {m}" for w, m in violations))
+    return rows
+
+
+@register_section(
+    "serving_sharded",
+    title="§Sharded serving — TP decode over simulated devices: parity, "
+          "per-device scaling, and the COLLECTIVE NonGEMM horizon",
+    timeout_s=560.0)
+def section_serving_sharded(ctx: BenchContext) -> List[dict]:
+    return sharded_rows()
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ import jax
 import numpy as np
 from jax._src import core as _core
 
-from .taxonomy import INLINE_PRIMS, OpGroup, classify
+from .taxonomy import COLLECTIVE_PRIMS, INLINE_PRIMS, OpGroup, classify
 
 _DTYPE_BYTES = {
     "float32": 4, "float64": 8, "float16": 2, "bfloat16": 2,
@@ -139,13 +139,25 @@ def estimate_bytes(in_shapes, in_dtypes, out_shapes, out_dtypes,
         idx = sum(_numel(s) * dtype_bytes(d)
                   for s, d in zip(in_shapes[1:], in_dtypes[1:]))
         return 2.0 * out_total + idx
-    total = out_total
-    for s, d in zip(in_shapes, in_dtypes):
-        total += _numel(s) * dtype_bytes(d)
-    return total
+    in_total = sum(_numel(s) * dtype_bytes(d)
+                   for s, d in zip(in_shapes, in_dtypes))
+    if prim in COLLECTIVE_PRIMS:
+        # link bytes per device, ring-style: an all-reduce sends and
+        # receives ~payload each (2(n-1)/n -> 2), an all-gather receives
+        # the full result. in+out bounds both and is never zero, even for
+        # axis_index (its scalar output still counts) — the COLLECTIVE
+        # group is billed against link_bw, not HBM (profiler/roofline).
+        return max(in_total + out_total, 1.0)
+    return in_total + out_total
 
 
 _LOOP_PRIMS = {"scan", "while", "cond"}
+
+#: manual-partitioning higher-order prims: the body jaxpr runs per device
+#: with per-shard avals, so descending records the per-device program —
+#: the same per-device convention the roofline uses. Collectives inside
+#: (psum2 / all_gather / ...) become first-class records.
+_SHARD_MAP_PRIMS = {"shard_map", "smap"}
 
 
 def _walk(jaxpr: _core.Jaxpr, records: list, scope_prefix: str, trip: int,
@@ -156,7 +168,8 @@ def _walk(jaxpr: _core.Jaxpr, records: list, scope_prefix: str, trip: int,
         scope = "/".join(p for p in (scope_prefix, stack) if p)
 
         sub_jaxprs: list[tuple[_core.Jaxpr, int]] = []
-        if prim in INLINE_PRIMS or prim in _LOOP_PRIMS:
+        if prim in INLINE_PRIMS or prim in _LOOP_PRIMS \
+                or prim in _SHARD_MAP_PRIMS:
             mult = 1
             if prim == "scan":
                 mult = int(eqn.params.get("length", 1))

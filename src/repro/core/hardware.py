@@ -145,28 +145,41 @@ CPU_HOST = HardwareSpec(
 #: efficiency 1.0 against high nominal peaks; every NonGEMM group falls off
 #: the array onto a scalar/vector path (the "*" entry: 5% of peak FLOPs, 2%
 #: of the streaming bandwidth ~= an 80 GB/s LPDDR-class path). This is a
-#: *stylized* point, not a datasheet model: it exists to put a
-#: "GEMM-nearly-free" column in the platform sweep, where the paper's
+#: *stylized* point for compute/memory, not a datasheet model: it exists to
+#: put a "GEMM-nearly-free" column in the platform sweep, where the paper's
 #: NonGEMM share is highest.
+#:
+#: ``link_bw`` IS grounded in the platform: an XDNA NPU tile has no
+#: dedicated interconnect — device-to-device collective traffic goes over
+#: the SoC fabric through shared system DRAM. A Phoenix/Hawk-Point-class
+#: socket runs dual-channel DDR5-5600: 2 ch x 8 B x 5.6 GT/s = 89.6 GB/s
+#: peak. A collective payload crosses that DRAM twice (producer store +
+#: consumer load), so the effective per-link bandwidth is half: 44.8 GB/s.
 NPU_RYZEN = HardwareSpec(
     name="npu_ryzen",
     peak_flops_bf16=120e12,
     peak_flops_f32=60e12,
     hbm_bw=4e12,
-    link_bw=8e9,
+    link_bw=44.8e9,
     hbm_bytes=32 * 2 ** 30,
     vmem_bytes=16 * 2 ** 20,
     group_efficiency=((ANY_GROUP, 0.05, 0.02),
                       ("gemm", 1.0, 1.0),
                       ("collective", 1.0, 1.0)),
-    provenance="stylized NPU point grounded in the Ryzen AI NPU GEMM study",
+    provenance="stylized NPU point grounded in the Ryzen AI NPU GEMM study; "
+               "link = dual-channel DDR5-5600 (89.6 GB/s) / 2 store+load "
+               "trips over the shared SoC fabric",
 )
 
 #: Bandwidth-bound near-memory accelerator (PAPERS.md: "Accelerating
 #: Bandwidth-Bound Deep Learning Inference with Main-Memory Accelerators").
 #: Aggregated across-DIMM internal bandwidth is decent (400 GB/s) but peak
 #: compute is tiny (16/8 TFLOP/s), so even weight-streaming GEMMs sit on the
-#: memory roof: the opposite extreme from npu_ryzen. Also stylized.
+#: memory roof: the opposite extreme from npu_ryzen. Compute/memory are
+#: stylized; ``link_bw`` is not: per-DIMM compute units have no sideband
+#: network, so inter-DIMM collective traffic round-trips through the host
+#: memory controller over the external DDR4-3200 interface — 8 B x 3.2 GT/s
+#: = 25.6 GB/s per channel, halved to 12.8 GB/s for the store+load trip.
 MEMBOUND_DIMM = HardwareSpec(
     name="membound_dimm",
     peak_flops_bf16=16e12,
@@ -175,7 +188,9 @@ MEMBOUND_DIMM = HardwareSpec(
     link_bw=12.8e9,
     hbm_bytes=512 * 2 ** 30,
     vmem_bytes=8 * 2 ** 20,
-    provenance="stylized near-memory point from the main-memory-accelerator work",
+    provenance="stylized near-memory point from the main-memory-accelerator "
+               "work; link = one DDR4-3200 channel (25.6 GB/s) / 2 "
+               "store+load trips through the host memory controller",
 )
 
 BY_NAME = {h.name: h for h in

@@ -104,10 +104,18 @@ def model_records(records, name: str, hw,
     """
     group_s: dict = defaultdict(float)
     op_s: dict = defaultdict(float)
+    link_bw = getattr(hw, "link_bw", 0.0)
     n = 0
     for r in records:
-        t = hw.group_time(r.group.value, r.flops, r.bytes_accessed) \
-            + launch_overhead_s * r.trip_count
+        if r.group is OpGroup.COLLECTIVE and link_bw:
+            # collectives move bytes over the interconnect, not HBM —
+            # same link-bandwidth term the compiled roofline uses
+            # (roofline.group_latency_model / RooflineTerms.collective_s)
+            t = r.bytes_accessed / link_bw \
+                + launch_overhead_s * r.trip_count
+        else:
+            t = hw.group_time(r.group.value, r.flops, r.bytes_accessed) \
+                + launch_overhead_s * r.trip_count
         group_s[r.group.value] += t
         op_s[(r.group.value, r.op_site)] += t
         n += 1

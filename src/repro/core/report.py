@@ -391,6 +391,24 @@ def render_serving_rows(rows: Iterable[dict]) -> str:
     return buf.getvalue()
 
 
+def render_sharded_rows(rows: Iterable[dict]) -> str:
+    """serving_sharded section: the TP scaling table — devices, measured
+    and per-device throughput, modeled step time/efficiency, and the
+    COLLECTIVE share climbing with the TP degree."""
+    buf = io.StringIO()
+    for r in rows:
+        parity = "ok" if r.get("parity_ok") is True else "FAIL"
+        buf.write(
+            f"{r['case']:<28} tp {r['tp']:>2} x{r['devices']:>2}dev  "
+            f"decode {r['decode_tok_per_s']:>8.1f} tok/s "
+            f"({r['per_device_tok_per_s']:>7.1f}/dev)  "
+            f"step {r['modeled_step_s']*1e6:>7.2f}us  "
+            f"eff {r['modeled_eff']:>5.3f}  "
+            f"collective {_fmt_pct(r['collective_frac'])}  "
+            f"parity {parity}\n")
+    return buf.getvalue()
+
+
 #: section name -> row renderer
 SECTION_RENDERERS = {
     "breakdown": render_breakdown_rows,
@@ -401,6 +419,7 @@ SECTION_RENDERERS = {
     "kernels": render_kernel_rows,
     "roofline": render_roofline_rows,
     "serving": render_serving_rows,
+    "serving_sharded": render_sharded_rows,
     "quantized": render_quantized_rows,
     "fusion": render_fusion_rows,
     "vision": render_vision_rows,

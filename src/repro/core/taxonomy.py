@@ -173,8 +173,17 @@ _reg(
 )
 _reg(
     OpGroup.COLLECTIVE,
-    "psum", "all_gather", "all_to_all", "ppermute", "pmax", "pmin",
+    # "psum2" is what jax.lax.psum binds to inside a shard_map body
+    # (jax >= 0.4.3x); the plain "psum" name survives in pmap-era jaxprs
+    "psum", "psum2", "all_gather", "all_to_all", "ppermute", "pmax", "pmin",
     "psum_scatter", "reduce_scatter", "axis_index", "pbroadcast",
+)
+
+#: Every jaxpr primitive registered under COLLECTIVE — the set the capture
+#: path (core/graph.py) and nglint NG010 use to recognize communication ops
+#: structurally (the ng:collective scope tag is still the preferred source).
+COLLECTIVE_PRIMS = frozenset(
+    n for n, g in _PRIM_GROUPS.items() if g is OpGroup.COLLECTIVE
 )
 _reg(
     OpGroup.CONTROL,

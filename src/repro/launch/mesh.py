@@ -23,6 +23,30 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_sim_mesh(data: int = 1, model: int = 1):
+    """``(data, model)`` mesh over simulated host devices.
+
+    The multi-device serving checks run TP/DP on one machine by asking XLA
+    for virtual CPU devices. That only works if the device count was pinned
+    BEFORE the first jax init, so this validates eagerly and names the knob
+    instead of letting jax raise a shape error deep inside ``make_mesh``.
+    """
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({data}, {model})")
+    need = data * model
+    have = jax.device_count()
+    if need > have:
+        raise RuntimeError(
+            f"make_sim_mesh({data}, {model}) needs {need} devices but jax "
+            f"sees {have}. Set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} in the "
+            f"environment BEFORE the first jax import (the device count "
+            f"locks at jax init; see scripts/sharded_serving_check.py).")
+    import numpy as np
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=np.array(jax.devices()[:need]))
+
+
 def mesh_chips(mesh) -> int:
     n = 1
     for s in mesh.devices.shape:

@@ -1,0 +1,168 @@
+"""Manual tensor parallelism for the serving stack (Megatron-style).
+
+GSPMD (``sharding.use_rules`` + constraints) partitions the *compiled*
+program — its collectives exist only in post-SPMD HLO, invisible to the
+captured-jaxpr profiling views. The serving engine instead lowers its jitted
+steps through ``shard_map``: each device runs the unchanged model code on
+its parameter/KV shards with a *per-device* config (``tp_local_config``),
+and the per-block reductions are explicit ``nn.tp_psum`` / the vocab-head
+``nn.tp_vocab_gather`` — real collectives in the traced jaxpr, captured as
+first-class COLLECTIVE :class:`~repro.core.graph.OpRecord`\\ s and billed
+against ``HardwareSpec.link_bw``.
+
+Sharding plan over the ``model`` mesh axis (degree ``tp``):
+
+    wq / bq            column-sharded  (heads)
+    wk / wv / bk / bv  column-sharded when ``tp | n_kv_heads``; replicated
+                       otherwise (GQA fallback: every device keeps all KV
+                       heads and serves ``n_heads/tp`` query heads)
+    wo                 row-sharded     -> partial sums -> tp_psum
+    w_up / w_gate / b_up  column-sharded (mlp)
+    w_down             row-sharded     -> partial sums -> tp_psum
+    head               column-sharded (vocab) when untied & ``tp | vocab``
+                       -> tp_vocab_gather (bit-exact)
+    embed / norms / everything else   replicated
+
+KV caches and paged block pools shard their head dim (``ndim-2``) exactly
+when the KV projections do; otherwise they replicate (the paged analogue of
+``kv_cache_spec``'s kv_seq fallback — block ids are global, so the block
+dim can never shard).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+#: mixer/FFN leaves column-sharded on their last dim
+_COL_SHARDED = frozenset({"wq", "bq", "w_up", "w_gate", "b_up"})
+#: leaves row-sharded on dim ndim-2 (their outputs need a tp_psum)
+_ROW_SHARDED = frozenset({"wo", "w_down"})
+#: KV-projection leaves — column-sharded only when tp divides n_kv_heads
+_KV_SHARDED = frozenset({"wk", "wv", "bk", "bv"})
+
+
+def mesh_tp(mesh: Optional[Mesh], axis: str = "model") -> int:
+    """TP degree of a mesh: the size of its model axis (1 if absent)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def tp_kv_sharded(cfg: ModelConfig, tp: int) -> bool:
+    return tp > 1 and cfg.n_kv_heads % tp == 0
+
+
+def tp_vocab_sharded(cfg: ModelConfig, tp: int) -> bool:
+    """The unembedding shards over vocab only when it is a separate matrix
+    (tied embeddings feed the input lookup, which needs the full table)."""
+    return (tp > 1 and not cfg.tie_embeddings
+            and cfg.input_mode == "tokens" and cfg.vocab_size % tp == 0)
+
+
+def validate_tp(cfg: ModelConfig, tp: int) -> None:
+    """Reject configs the manual-TP plan cannot run correctly.
+
+    The serving engines only page plain attention blocks, and the psum
+    placement assumes dense FFNs without biases folded into the row-sharded
+    projections (a per-device ``b_down`` would be summed ``tp`` times).
+    """
+    if tp <= 1:
+        return
+    bad = set(cfg.layer_kinds()) - {"attn"}
+    if bad:
+        raise ValueError(f"manual TP supports uniform 'attn' stacks only; "
+                         f"config has layer kinds {sorted(bad)}")
+    if cfg.is_moe or cfg.mla:
+        raise ValueError("manual TP does not support MoE/MLA configs")
+    if cfg.qkv_bias or cfg.ffn_bias:
+        raise ValueError(
+            "manual TP does not support qkv_bias/ffn_bias configs (the "
+            "row-sharded projections would sum the bias tp times)")
+    if cfg.n_heads % tp:
+        raise ValueError(f"tp={tp} does not divide n_heads={cfg.n_heads}")
+    if cfg.d_ff % tp:
+        raise ValueError(f"tp={tp} does not divide d_ff={cfg.d_ff}")
+    local_heads = cfg.n_heads // tp
+    if cfg.n_kv_heads % tp and local_heads % cfg.n_kv_heads:
+        raise ValueError(
+            f"GQA fallback needs n_kv_heads={cfg.n_kv_heads} to divide the "
+            f"per-device n_heads/tp={local_heads} when tp does not divide "
+            f"n_kv_heads")
+
+
+def tp_local_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """The per-device config a shard_map body runs the model under."""
+    if tp <= 1:
+        return cfg
+    validate_tp(cfg, tp)
+    kv = cfg.n_kv_heads // tp if tp_kv_sharded(cfg, tp) else cfg.n_kv_heads
+    return cfg.replace(
+        n_heads=cfg.n_heads // tp,
+        n_kv_heads=kv,
+        d_ff=cfg.d_ff // tp,
+        # pin: resolved_head_dim defaults to d_model // n_heads, which
+        # would silently change under the reduced head count
+        head_dim=cfg.resolved_head_dim,
+    )
+
+
+def _leaf_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def tp_param_specs(params, cfg: ModelConfig, tp: int,
+                   axis: str = "model"):
+    """Same-structure tree of PartitionSpec for the manual-TP plan.
+
+    Works for both flat and lax.scan-stacked block trees: shard dims are
+    counted from the trailing end, so leading layer dims stay unsharded.
+    """
+    kv = tp_kv_sharded(cfg, tp)
+    vocab = tp_vocab_sharded(cfg, tp)
+
+    def one(path, leaf):
+        entries = [None] * leaf.ndim
+        if tp <= 1:
+            return P(*entries)
+        name = _leaf_names(path)[-1] if _leaf_names(path) else ""
+        if name in _COL_SHARDED or (kv and name in _KV_SHARDED) \
+                or (vocab and name == "head"):
+            entries[-1] = axis
+        elif name in _ROW_SHARDED and leaf.ndim >= 2:
+            entries[-2] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def tp_cache_specs(caches, cfg: ModelConfig, tp: int, axis: str = "model"):
+    """PartitionSpec tree for KV caches or paged pools: the head dim
+    (``ndim-2`` of every ``(..., S_or_block, H_kv, Dh)`` leaf) shards
+    exactly when the KV projections do."""
+    kv = tp_kv_sharded(cfg, tp)
+
+    def one(leaf):
+        entries = [None] * leaf.ndim
+        if kv and leaf.ndim >= 4:
+            entries[-2] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map(one, caches)
+
+
+def named_shardings(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (for jax.device_put)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -163,6 +163,9 @@ def block_forward(params, x, cfg: ModelConfig, kind: str, positions,
     a = _mixer_forward(params["mixer"], h, cfg, kind, positions)
     if kind in ("mlstm", "slstm"):
         return nn.residual_add(x, a), aux
+    # manual TP (shard_map bodies): the row-sharded out-projection leaves a
+    # partial sum — reduce before anything reads it. No-op otherwise.
+    a = nn.tp_psum(a)
     a = checkpoint_name(a, "proj_out")
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
@@ -175,6 +178,7 @@ def block_forward(params, x, cfg: ModelConfig, kind: str, positions,
         f, aux = M.moe_forward(params["moe"], h, cfg)
     else:
         f = M.ffn_forward(params["ffn"], h, cfg)
+    f = nn.tp_psum(f)
     f = checkpoint_name(f, "proj_out")
     if cfg.post_norm:
         f = _apply_norm(params["post_norm2"], f, cfg)
@@ -207,6 +211,7 @@ def block_prefill(params, x, cfg: ModelConfig, kind: str, positions,
                                   max_len, lengths=lengths)
     if kind in ("mlstm", "slstm"):
         return nn.residual_add(x, a), cache, aux
+    a = nn.tp_psum(a)
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
     h, x = _add_norm(params["norm2"], a, x, cfg)
@@ -216,6 +221,7 @@ def block_prefill(params, x, cfg: ModelConfig, kind: str, positions,
         f, aux = M.moe_forward(params["moe"], h, cfg)
     else:
         f = M.ffn_forward(params["ffn"], h, cfg)
+    f = nn.tp_psum(f)
     if cfg.post_norm:
         f = _apply_norm(params["post_norm2"], f, cfg)
     x = nn.residual_add(x, f)
@@ -249,6 +255,7 @@ def block_decode(params, x, cfg: ModelConfig, kind: str, cache, pos,
         a, cache = A.attn_decode(params["mixer"], h, cfg, kind, cache, pos)
     if kind in ("mlstm", "slstm"):
         return nn.residual_add(x, a), cache
+    a = nn.tp_psum(a)
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
     h, x = _add_norm(params["norm2"], a, x, cfg)
@@ -256,6 +263,7 @@ def block_decode(params, x, cfg: ModelConfig, kind: str, cache, pos,
         f, _ = M.moe_forward(params["moe"], h, cfg)
     else:
         f = M.ffn_forward(params["ffn"], h, cfg)
+    f = nn.tp_psum(f)
     if cfg.post_norm:
         f = _apply_norm(params["post_norm2"], f, cfg)
     return nn.residual_add(x, f), cache
@@ -407,6 +415,9 @@ def embed_inputs(params, inputs, cfg: ModelConfig, positions):
 def logits_from_hidden(params, h, cfg: ModelConfig):
     if "head" in params:
         logits = nn.linear(h, params["head"].astype(h.dtype))
+        # manual TP with a vocab-sharded head: gather the logit slices
+        # (bit-exact — column-sharded GEMM). No-op everywhere else.
+        logits = nn.tp_vocab_gather(logits)
     else:
         # tied head: contract against the embedding table directly — an
         # explicit .T materializes a vocab x d copy every forward
@@ -610,6 +621,7 @@ def block_extend(params, x, cfg: ModelConfig, kind: str, cache, start,
         a, cache = A.mla_extend(params["mixer"], h, cfg, cache, start)
     else:
         a, cache = A.attn_extend(params["mixer"], h, cfg, kind, cache, start)
+    a = nn.tp_psum(a)
     if cfg.post_norm:
         a = _apply_norm(params["post_norm1"], a, cfg)
     h, x = _add_norm(params["norm2"], a, x, cfg)
@@ -617,6 +629,7 @@ def block_extend(params, x, cfg: ModelConfig, kind: str, cache, start,
         f, _ = M.moe_forward(params["moe"], h, cfg)
     else:
         f = M.ffn_forward(params["ffn"], h, cfg)
+    f = nn.tp_psum(f)
     if cfg.post_norm:
         f = _apply_norm(params["post_norm2"], f, cfg)
     return nn.residual_add(x, f), cache

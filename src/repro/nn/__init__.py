@@ -635,6 +635,51 @@ def _fused_qdq(x):
 
 
 # ---------------------------------------------------------------------------
+# Collective sites (manual tensor parallelism inside shard_map bodies).
+#
+# These are NOT @tagged identities: outside a ``sharding.manual_axis``
+# context they return their input untouched — no scope, no primitive — so
+# single-device and GSPMD traces are bit-identical to before. Inside a
+# shard_map body they emit the real collective under an ``ng:collective``
+# tag, which is how the per-block all-reduces of a tensor-parallel decode
+# become first-class COLLECTIVE OpRecords in captured graphs.
+# ---------------------------------------------------------------------------
+
+def tp_psum(x):
+    """All-reduce a partial block output over the manual TP axis.
+
+    The Megatron reduction: attention out-projections and FFN down-
+    projections are row-sharded, so each device holds a partial sum that
+    must be psum'd before the next residual add / norm reads it.
+    """
+    from repro import sharding as _sh
+    axis = _sh.manual_axis_name()
+    if axis is None:
+        return x
+    with jax.named_scope(scope_tag(OpGroup.COLLECTIVE, "psum")), \
+            jax.named_scope(f"c{next(_CALLS)}"):
+        return jax.lax.psum(x, axis)
+
+
+def tp_vocab_gather(logits):
+    """All-gather vocab-sharded logit slices along the last dim.
+
+    Only active when the manual context declares the unembedding
+    vocab-sharded. Exact by construction: a column-sharded GEMM computes
+    every logit element with the full contraction, so the gathered result
+    is bit-identical to the replicated computation.
+    """
+    from repro import sharding as _sh
+    axis = _sh.manual_axis_name()
+    if axis is None or not _sh.manual_vocab_sharded():
+        return logits
+    with jax.named_scope(scope_tag(OpGroup.COLLECTIVE, "all_gather")), \
+            jax.named_scope(f"c{next(_CALLS)}"):
+        return jax.lax.all_gather(logits, axis, axis=logits.ndim - 1,
+                                  tiled=True)
+
+
+# ---------------------------------------------------------------------------
 # GEMM sites (tagged so attribution is exact, not heuristic)
 # ---------------------------------------------------------------------------
 

@@ -39,9 +39,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro import nn, sharding
-from repro.models import init_lm_cache, lm_decode, lm_extend
+from repro.models import init_lm_cache, lm_decode, lm_extend, lm_prefill
+from repro.models import tp as tp_mod
 from repro.models.common import ModelConfig
 from repro.runtime import cast_params
 from repro.serving import Engine, Request, _next_pow2
@@ -242,6 +244,125 @@ def _scatter_tree(pools: dict, caches: dict, table_row, start, lo, hi,
     }
 
 
+# ---------------------------------------------------------------------------
+# manual tensor parallelism (shard_map: the collectives live in the trace)
+# ---------------------------------------------------------------------------
+
+def _tp_shard_map(body, mesh, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+    # check_rep=False: psum-produced outputs defeat static replication
+    # inference (and with it, psum binds as the plain `psum` primitive)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def _tp_cache_struct_specs(cfg: ModelConfig, max_len: int, tp: int):
+    """PartitionSpec tree matching lm_prefill's returned cache tree (same
+    treedef as ``init_lm_cache`` — specs only need leaf ranks)."""
+    struct = jax.eval_shape(lambda: init_lm_cache(cfg, 1, max_len))
+    return tp_mod.tp_cache_specs(struct, cfg, tp)
+
+
+def _make_tp_paged_decode_step(cfg: ModelConfig, max_len: int, mesh,
+                               tp: int, greedy: bool,
+                               fused: bool) -> Callable:
+    """shard_map variant of ``make_paged_decode_step``: every device runs
+    the unchanged paged-decode body on its parameter/pool shards under the
+    per-device config, and the per-block ``nn.tp_psum`` reductions (plus
+    the ``nn.tp_vocab_gather`` on a sharded unembedding) become explicit
+    COLLECTIVE primitives in the traced jaxpr."""
+    local = tp_mod.tp_local_config(cfg, tp)
+    vocab = tp_mod.tp_vocab_sharded(cfg, tp)
+
+    def body(params, token, pos, pools, tables, key):
+        with sharding.manual_axis("model", vocab_sharded=vocab), \
+                nn.fuse(fused):
+            working = cast_params(params, local.activation_dtype)
+            caches = _gather_tree(pools, tables, max_len)
+            logits, caches = lm_decode(working, token, pos, caches, local)
+            pools = _writeback_tree(pools, caches, tables, pos)
+            lf = logits.astype(jnp.float32)
+            if greedy:
+                nxt = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+            else:
+                nxt = jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+        return nxt, pools
+
+    rep = P()
+
+    def paged_step(params, token, pos, pools, tables, key):
+        pspecs = tp_mod.tp_param_specs(params, cfg, tp)
+        cspecs = tp_mod.tp_cache_specs(pools, cfg, tp)
+        return _tp_shard_map(
+            body, mesh,
+            in_specs=(pspecs, rep, rep, cspecs, rep, rep),
+            out_specs=(rep, cspecs),
+        )(params, token, pos, pools, tables, key)
+    return paged_step
+
+
+def _make_tp_paged_extend_step(cfg: ModelConfig, max_len: int, mesh,
+                               tp: int, fused: bool) -> Callable:
+    """shard_map variant of ``make_paged_extend_step`` (chunked prefill)."""
+    local = tp_mod.tp_local_config(cfg, tp)
+    vocab = tp_mod.tp_vocab_sharded(cfg, tp)
+
+    def body(params, tokens, start, pools, table_row, lo, hi):
+        with sharding.manual_axis("model", vocab_sharded=vocab), \
+                nn.fuse(fused):
+            working = cast_params(params, local.activation_dtype)
+            caches = _gather_tree(pools, table_row[None, :], max_len)
+            logits, caches = lm_extend(working, tokens, start, caches, local)
+            pools = _scatter_tree(pools, caches, table_row, start, lo, hi,
+                                  tokens.shape[1])
+        return logits, pools
+
+    rep = P()
+
+    def extend_step(params, tokens, start, pools, table_row, lo, hi):
+        pspecs = tp_mod.tp_param_specs(params, cfg, tp)
+        cspecs = tp_mod.tp_cache_specs(pools, cfg, tp)
+        return _tp_shard_map(
+            body, mesh,
+            in_specs=(pspecs, rep, rep, cspecs, rep, rep, rep),
+            out_specs=(rep, cspecs),
+        )(params, tokens, start, pools, table_row, lo, hi)
+    return extend_step
+
+
+def make_tp_prefill_step(cfg: ModelConfig, max_len: int, mesh,
+                         fused: bool = False) -> Callable:
+    """shard_map variant of ``serving.make_prefill_step`` for the cold
+    admission path: same signature, but the returned B=1 cache tree is
+    head-sharded (when TP divides ``n_kv_heads``) so it scatters straight
+    into the engine's sharded pools."""
+    tp = tp_mod.mesh_tp(mesh)
+    local = tp_mod.tp_local_config(cfg, tp)
+    vocab = tp_mod.tp_vocab_sharded(cfg, tp)
+    cspecs = _tp_cache_struct_specs(cfg, max_len, tp)
+
+    def body(params, tokens, lengths):
+        with sharding.manual_axis("model", vocab_sharded=vocab), \
+                nn.fuse(fused):
+            working = cast_params(params, local.activation_dtype)
+            return lm_prefill(working, tokens, local, max_len=max_len,
+                              lengths=lengths)
+
+    rep = P()
+
+    def prefill_step(params, tokens, lengths=None):
+        if lengths is None:
+            lengths = jnp.full((tokens.shape[0],), tokens.shape[1],
+                               jnp.int32)
+        pspecs = tp_mod.tp_param_specs(params, cfg, tp)
+        return _tp_shard_map(
+            body, mesh,
+            in_specs=(pspecs, rep, rep),
+            out_specs=(rep, cspecs),
+        )(params, tokens, lengths)
+    return prefill_step
+
+
 def make_paged_decode_step(cfg: ModelConfig, max_len: int, mesh=None,
                            greedy: bool = True,
                            fused: bool = False) -> Callable:
@@ -250,7 +371,16 @@ def make_paged_decode_step(cfg: ModelConfig, max_len: int, mesh=None,
     Gathers the block tables into a contiguous view, runs the UNCHANGED
     ``lm_decode`` program (same sampling tail as ``make_serve_step``), and
     scatters each sequence's new KV row back into its block.
+
+    A mesh whose ``model`` axis is larger than 1 selects the manual-TP
+    shard_map path (see ``repro.models.tp``): bit-identical token streams,
+    explicit COLLECTIVE primitives in the captured program.
     """
+    tp = tp_mod.mesh_tp(mesh)
+    if tp > 1:
+        return _make_tp_paged_decode_step(cfg, max_len, mesh, tp,
+                                          greedy, fused)
+
     def paged_step(params, token, pos, pools, tables, key):
         with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard), \
                 nn.fuse(fused):
@@ -276,7 +406,14 @@ def make_paged_extend_step(cfg: ModelConfig, max_len: int, mesh=None,
     view, run ``lm_extend`` at absolute offset ``start``, scatter the
     chunk's KV rows into its blocks. Rows outside [lo, hi) — the reused
     prefix on the left, bucket padding on the right — go to scratch.
+
+    A mesh with a ``model`` axis larger than 1 selects the manual-TP
+    shard_map path, like ``make_paged_decode_step``.
     """
+    tp = tp_mod.mesh_tp(mesh)
+    if tp > 1:
+        return _make_tp_paged_extend_step(cfg, max_len, mesh, tp, fused)
+
     def extend_step(params, tokens, start, pools, table_row, lo, hi):
         with sharding.use_rules(mesh, cfg.fsdp, cfg.seq_shard), \
                 nn.fuse(fused):
@@ -326,9 +463,12 @@ class PagedEngine(Engine):
             raise ValueError(
                 f"PagedEngine needs full-depth positional caches on every "
                 f"layer; kinds {sorted(bad)} cannot page")
+        mesh = kw.get("mesh")
+        self.tp = tp_mod.mesh_tp(mesh)
+        if self.tp > 1:
+            tp_mod.validate_tp(cfg, self.tp)
         super().__init__(cfg, params, max_batch=max_batch, max_len=max_len,
                          **kw)
-        mesh = kw.get("mesh")
         self.block_size = block_size
         self.blocks_per_seq = -(-max_len // block_size)
         if num_blocks is None:
@@ -342,6 +482,23 @@ class PagedEngine(Engine):
         # and insert jits stay untraced — jax.jit is lazy)
         self._caches = None
         self._pools = init_lm_cache(cfg, num_blocks, block_size)
+        if self.tp > 1:
+            # place shards once at init: TP params (heads/mlp/vocab over
+            # the model axis), head-sharded pools when TP divides
+            # n_kv_heads (replicated GQA fallback otherwise). The data
+            # axis replicates — block ids are global, so the paged batch
+            # cannot shard. The cold-path prefill must also produce
+            # head-sharded B=1 caches, so swap in the shard_map variant.
+            self.params = jax.device_put(
+                self.params,
+                tp_mod.named_shardings(mesh, tp_mod.tp_param_specs(
+                    self.params, cfg, self.tp)))
+            self._pools = jax.device_put(
+                self._pools,
+                tp_mod.named_shardings(mesh, tp_mod.tp_cache_specs(
+                    self._pools, cfg, self.tp)))
+            self._prefill = jax.jit(
+                make_tp_prefill_step(cfg, max_len, mesh, fused=self.fused))
         self._tables = np.zeros((max_batch, self.blocks_per_seq), np.int32)
         self._seq_blocks: List[List[int]] = [[] for _ in range(max_batch)]
         self._prefilling: Dict[int, dict] = {}

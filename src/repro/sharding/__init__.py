@@ -61,6 +61,44 @@ def use_rules(mesh: Optional[Mesh], fsdp: bool = False,
         _STATE.ctx = prev
 
 
+# ---------------------------------------------------------------------------
+# manual partitioning (shard_map bodies): inside a shard_map every array is
+# the per-device shard and GSPMD constraints are meaningless — the model must
+# emit its collectives explicitly. ``manual_axis`` tells the nn collective
+# ops (nn.tp_psum / nn.tp_vocab_gather) which mesh axis to reduce over; the
+# sites are no-ops whenever no manual axis is active, so the GSPMD and
+# single-device paths trace exactly as before.
+# ---------------------------------------------------------------------------
+
+_MANUAL = threading.local()
+
+
+@contextlib.contextmanager
+def manual_axis(name: str, vocab_sharded: bool = False):
+    """Activate manual-collective mode for a shard_map body trace.
+
+    ``vocab_sharded``: the unembedding projection is vocab-sharded over the
+    axis, so ``nn.tp_vocab_gather`` all-gathers the per-device logit slices
+    (exact: a column-sharded GEMM computes each logit bit-identically).
+    """
+    prev = getattr(_MANUAL, "ctx", None)
+    _MANUAL.ctx = {"axis": name, "vocab_sharded": bool(vocab_sharded)}
+    try:
+        yield
+    finally:
+        _MANUAL.ctx = prev
+
+
+def manual_axis_name() -> Optional[str]:
+    ctx = getattr(_MANUAL, "ctx", None)
+    return ctx["axis"] if ctx else None
+
+
+def manual_vocab_sharded() -> bool:
+    ctx = getattr(_MANUAL, "ctx", None)
+    return bool(ctx and ctx["vocab_sharded"])
+
+
 def logical_map(fsdp: bool, seq_shard: bool = False) -> dict:
     return {
         "batch": ("pod", "data"),
@@ -280,6 +318,31 @@ def cache_sharding(caches, mesh: Mesh):
         return NamedSharding(mesh, kv_cache_spec(shape, mesh))
 
     return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def pool_spec(shape: Sequence[int], mesh: Mesh) -> P:
+    """Paged KV block-pool spec: ``(num_blocks, block_size, H_kv, Dh)``
+    leaves (plus a leading layer dim on scan-stacked leaves).
+
+    TP shards the KV-head dim (always ``ndim-2``) over the model axis when
+    it divides; otherwise the pool replicates — the paged analogue of
+    ``kv_cache_spec``'s kv_seq fallback (block ids in the tables are
+    global, so the block dim itself can never shard)."""
+    mesh_sizes = dict(mesh.shape)
+    entries: list = [None] * len(shape)
+    size = mesh_sizes.get("model")
+    if len(shape) >= 4 and size and size > 1 \
+            and int(shape[-2]) % size == 0:
+        entries[-2] = "model"
+    return P(*entries)
+
+
+def pool_sharding(pools, mesh: Mesh):
+    """Same-structure NamedSharding tree for a paged block-pool pytree."""
+    def one(leaf):
+        return NamedSharding(mesh, pool_spec(leaf.shape, mesh))
+
+    return jax.tree_util.tree_map(one, pools)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

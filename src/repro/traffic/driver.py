@@ -33,6 +33,8 @@ class LoadReport:
     mean_queue_wait_s: float
     mean_decode_tok_latency_s: float
     prefix_hit_rate: float           # 0.0 when the engine has no prefix cache
+    n_devices: int = 1               # TP degree of the engine (mesh-sharded)
+    per_device_goodput_tok_per_s: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -51,11 +53,15 @@ def summarize(engine: Engine, finished: Sequence[Request],
     tok_lat = [r.decode_tok_latency_s for r in finished if r.decode_tokens]
     emitted = sum(len(r.output) for r in finished)
     cache = getattr(engine, "prefix_cache", None)
+    # a mesh-sharded engine spends tp devices per emitted token; per-device
+    # goodput is the number the serving_sharded scaling story compares
+    n_devices = max(1, int(getattr(engine, "tp", 1) or 1))
+    goodput = emitted / makespan_s if makespan_s > 0 else 0.0
     return LoadReport(
         completed=len(finished),
         makespan_s=makespan_s,
         emitted_tokens=emitted,
-        goodput_tok_per_s=emitted / makespan_s if makespan_s > 0 else 0.0,
+        goodput_tok_per_s=goodput,
         mean_ttft_s=float(np.mean(ttfts)) if ttfts else 0.0,
         p50_ttft_s=_percentile(ttfts, 50),
         p99_ttft_s=_percentile(ttfts, 99),
@@ -63,6 +69,8 @@ def summarize(engine: Engine, finished: Sequence[Request],
         mean_queue_wait_s=float(np.mean(waits)) if waits else 0.0,
         mean_decode_tok_latency_s=float(np.mean(tok_lat)) if tok_lat else 0.0,
         prefix_hit_rate=cache.hit_rate if cache is not None else 0.0,
+        n_devices=n_devices,
+        per_device_goodput_tok_per_s=goodput / n_devices,
     )
 
 

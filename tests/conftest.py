@@ -1,12 +1,46 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real 1-device topology (only launch/dryrun.py pins 512 devices)."""
+see the real 1-device topology (only launch/dryrun.py pins 512 devices).
+
+Tests that need a multi-device topology (marker ``multidevice``) never
+flip XLA_FLAGS in-process: the device count is locked at the first jax
+import, so they go through the :func:`eight_devices` fixture, which runs a
+check script in a subprocess whose first line pins
+``--xla_force_host_platform_device_count=8`` before importing jax."""
+
+import os
+import subprocess
+import sys
 
 import jax
 import pytest
 
 jax.config.update("jax_enable_x64", False)
 
+_REPO = os.path.join(os.path.dirname(__file__), "..")
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def eight_devices():
+    """Runner for scripts that self-pin an 8-virtual-device topology.
+
+    Returns ``run(script_name, mode) -> stdout``: spawns
+    ``scripts/<script_name> <mode>`` with the repo's ``src`` on
+    PYTHONPATH and any inherited XLA_FLAGS dropped (the child sets its
+    own), asserting a zero exit code.
+    """
+    def run(script_name: str, mode: str, timeout: int = 560) -> str:
+        script = os.path.join(_REPO, "scripts", script_name)
+        env = dict(os.environ, PYTHONPATH=os.path.join(_REPO, "src"))
+        env.pop("XLA_FLAGS", None)
+        r = subprocess.run([sys.executable, script, mode],
+                           capture_output=True, text=True, env=env,
+                           timeout=timeout)
+        assert r.returncode == 0, r.stdout + r.stderr
+        return r.stdout
+
+    return run

@@ -52,9 +52,9 @@ def _run(rule_id, ctx):
 # registry
 # ---------------------------------------------------------------------------
 
-def test_all_nine_builtin_rules_registered():
+def test_all_ten_builtin_rules_registered():
     ids = [r.id for r in all_rules()]
-    assert [f"NG{i:03d}" for i in range(1, 10)] == ids
+    assert [f"NG{i:03d}" for i in range(1, 11)] == ids
 
 
 def test_register_rule_rejects_duplicate_id():
@@ -340,6 +340,23 @@ def test_ng009_flags_untagged_paged_op(monkeypatch):
                         nn.paged_kv_gather.__wrapped__)
     out = run_static_rules(rules=[get_rule("NG009")])
     assert any("paged_kv_gather" in f.where and "tag" in f.message
+               for f in out)
+
+
+# ---------------------------------------------------------------------------
+# NG010 — manual-TP collectives in COLLECTIVE with nonzero bytes (static)
+# ---------------------------------------------------------------------------
+
+def test_ng010_clean_on_this_repo():
+    assert run_static_rules(rules=[get_rule("NG010")]) == []
+
+
+def test_ng010_flags_silent_collective_site(monkeypatch):
+    # neuter tp_psum into an identity: the rule must notice the psum
+    # op_site vanished from the captured shard_map stream
+    monkeypatch.setattr(nn, "tp_psum", lambda x: x)
+    out = run_static_rules(rules=[get_rule("NG010")])
+    assert any("tp_psum" in f.where and "COLLECTIVE" in f.message
                for f in out)
 
 

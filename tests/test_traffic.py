@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import init_lm
-from repro.serving import PagedEngine
+from repro.serving import PagedEngine, Request
 from repro.traffic import (TraceRequest, bursty_trace, drive, load_trace,
                            poisson_trace, prime, save_trace, shadow_trace,
                            shared_prefix_trace, summarize)
@@ -121,3 +121,21 @@ def test_summarize_handles_empty_run(traffic_model):
     rep = summarize(eng, [], 1.0)
     assert rep.completed == 0 and rep.goodput_tok_per_s == 0.0
     assert rep.p99_ttft_s == 0.0 and rep.mean_queue_wait_s == 0.0
+    # single-device engine: per-device goodput is just goodput
+    assert rep.n_devices == 1
+    assert rep.per_device_goodput_tok_per_s == rep.goodput_tok_per_s
+
+
+def test_summarize_normalizes_goodput_per_device(traffic_model):
+    cfg, params = traffic_model
+    eng = PagedEngine(cfg, params, max_batch=1, max_len=64, block_size=8)
+    eng.tp = 4  # pretend the engine runs 4-way TP (mesh needs 4 devices)
+    done = []
+    for p, n in (([1, 2, 3], 4), ([4, 5], 6)):
+        r = Request(uid=len(done), prompt=p, max_new_tokens=n)
+        r.output = list(range(n))
+        done.append(r)
+    rep = summarize(eng, done, 2.0)
+    assert rep.n_devices == 4
+    assert rep.goodput_tok_per_s == pytest.approx(10 / 2.0)
+    assert rep.per_device_goodput_tok_per_s == pytest.approx(10 / 2.0 / 4)
