@@ -288,6 +288,23 @@ def check_kernel_specs(_ctx: Optional[AnalysisContext]):
                         "the block will miscompile or read out of bounds",
                 fix_hint="pad operands to a block multiple (_pad_rows) "
                          "or clamp the block to the dim (min(block, dim))")
+    # every instantiated attention template spec must be registered: an
+    # unregistered variant would execute without any of the static vetting
+    # above (and without the interpret-fallback contract)
+    from repro.kernels import attn_template as _tmpl
+    for aspec in _tmpl.instantiated_specs():
+        key = _tmpl.kernel_key(aspec)
+        if key not in KERNEL_SPECS:
+            yield Finding(
+                rule="NG005", severity="error", workload="static",
+                where=f"attn_template:{aspec.name}",
+                message=f"attention spec {aspec.name!r} (mask="
+                        f"{aspec.mask!r}) was instantiated but is missing "
+                        "from repro.kernels.ops.KERNEL_SPECS — the "
+                        "generated variant escapes static vetting",
+                fix_hint="instantiate via attn_template.make_attention("
+                         "spec) with register=True (the default), or "
+                         "register_template_kernel by hand")
 
 
 # ---------------------------------------------------------------------------

@@ -73,8 +73,17 @@ def _cmd_list(args) -> int:
 
     rows = entries("zoo", CASES) + entries("serving", SERVING_CASES) \
         + entries("vision", VISION_CASES)
+
+    # Table-2 micro operators (repro.core.microbench registry), including
+    # the generated attn_template:* kernel variants
+    from repro.core.microbench import TABLE2_SHAPES, registry
+
+    micro = [{"name": n, "group": op.group.value,
+              "shape": list(TABLE2_SHAPES.get(n, ()))}
+             for n, op in sorted(registry().items())]
     if args.json:
-        print(json.dumps({"cases": rows, "backends": list_backends()},
+        print(json.dumps({"cases": rows, "micro_ops": micro,
+                          "backends": list_backends()},
                          indent=1))
         return 0
     hdr = (f"{'case':<24} {'kind':<8} {'arch':<22} {'tiers':<11} "
@@ -88,6 +97,15 @@ def _cmd_list(args) -> int:
               f"{d['builder']}")
     print(f"\n{len(rows)} case(s); profiler backends: "
           f"{', '.join(list_backends())}")
+    mhdr = f"\n{'micro op':<32} {'group':<16} shape"
+    print(mhdr)
+    print("-" * 64)
+    for m in micro:
+        shape = "x".join(str(s) for s in m["shape"]) or "(harvested)"
+        print(f"{m['name']:<32} {m['group']:<16} {shape}")
+    print(f"\n{len(micro)} micro op(s) "
+          f"({sum(1 for m in micro if m['name'].startswith('attn_template:'))}"
+          f" attn_template variants)")
     return 0
 
 

@@ -152,6 +152,16 @@ FUSION_PATTERNS: Tuple[FusionPattern, ...] = (
     FusionPattern("fused_softmax_sample",
                   ((OpGroup.LOGIT, "softmax"),
                    (OpGroup.REDUCTION, "argmax"))),
+    # one-query decode attention: qk GEMM -> mask -> softmax -> pv GEMM
+    # as ONE kernel-boundary record (the attn_template decode-1q spec the
+    # executor routes through under nn.fuse()). Prefill never matches:
+    # its softmax site is "online_softmax", not "softmax".
+    FusionPattern("fused_attn_decode",
+                  ((OpGroup.GEMM, "attn_qk"),
+                   (OpGroup.ELEMENTWISE, "attn_mask"),
+                   (OpGroup.LOGIT, "softmax"),
+                   (OpGroup.GEMM, "attn_pv")),
+                  kernel="attn_template:decode"),
     # intra-site collapses: one launch instead of the op's primitive train
     FusionPattern("fused_swiglu", ((OpGroup.ACTIVATION, "swiglu"),),
                   min_records=2, kernel="swiglu"),
@@ -163,6 +173,12 @@ FUSION_PATTERNS: Tuple[FusionPattern, ...] = (
                   ((OpGroup.NORMALIZATION, "layer_norm"),),
                   min_records=2, kernel="layer_norm"),
     FusionPattern("fused_softmax", ((OpGroup.LOGIT, "softmax"),),
+                  min_records=2),
+    # the chunked-prefill online-softmax rescale train (max/exp/sum/mul
+    # per KV chunk) — one launch per chunk, pure relabel like
+    # fused_softmax (the flash kernels already execute it fused)
+    FusionPattern("fused_online_softmax",
+                  ((OpGroup.LOGIT, "online_softmax"),),
                   min_records=2),
     FusionPattern("fused_gelu", ((OpGroup.ACTIVATION, "gelu"),),
                   min_records=2),

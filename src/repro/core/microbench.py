@@ -260,6 +260,53 @@ def _mk_fused_dequant_add_rms_norm(shape, dtype, key):
         (q, res)
 
 
+# --- attention template family (repro.kernels.attn_template) — one row per
+# --- generated variant, so the kernel family is visible in the Table-2
+# --- artifact and regression-gated by bench compare
+
+
+def _attn_maker(variant: str, window: Optional[int] = None,
+                decode: bool = False):
+    """Micro maker for one generated attention variant.
+
+    ``shape`` is (batch, kv_seq, heads, head_dim); the decode variant uses
+    a single query row against the full KV depth.  ``interpret`` is left
+    at its default so the kernel compiles on TPU and interprets on host,
+    exactly like the model-level call sites.
+    """
+    def make(shape, dtype, key):
+        from repro.kernels import attn_template
+        b, s, h, d = shape
+        k1, k2, k3 = jax.random.split(key, 3)
+        k = _rng(k2, (b, s, h, d), dtype)
+        v = _rng(k3, (b, s, h, d), dtype)
+        fn = attn_template.get(variant)
+        if decode:
+            q = _rng(k1, (b, 1, h, d), dtype)
+            lengths = jnp.full((b,), s, jnp.int32)
+            return (lambda q, k, v, lengths: fn(q, k, v, lengths)), \
+                (q, k, v, lengths)
+        q = _rng(k1, shape, dtype)
+        if window is not None:
+            return (lambda q, k, v: fn(q, k, v, window=window)), (q, k, v)
+        return (lambda q, k, v: fn(q, k, v)), (q, k, v)
+    return make
+
+
+for _name, _variant, _kw in (
+        ("attn_template:causal:d64", "causal", {}),
+        ("attn_template:causal:d128", "causal", {}),
+        ("attn_template:full:d64", "full", {}),
+        ("attn_template:full:d128", "full", {}),
+        ("attn_template:window64:d64", "window", {"window": 64}),
+        ("attn_template:window256:d64", "window", {"window": 256}),
+        ("attn_template:decode:d64", "decode", {"decode": True}),
+        ("attn_template:decode:d128", "decode", {"decode": True}),
+):
+    register(_name, OpGroup.FUSED)(_attn_maker(_variant, **_kw))
+del _name, _variant, _kw
+
+
 #: Paper Table 2 example shapes (the realistic defaults).
 TABLE2_SHAPES: Dict[str, tuple] = {
     "relu": (2, 64, 533),
@@ -284,6 +331,17 @@ TABLE2_SHAPES: Dict[str, tuple] = {
     "fused_add_rms_norm": (1, 10, 4096),
     "fused_rope": (1, 128, 32, 128),
     "fused_dequant_add_rms_norm": (1, 10, 4096),
+    # generated attention variants (repro.kernels.attn_template): one row
+    # per template over head dims {64, 128} and window sizes; shape is
+    # (batch, kv_seq, heads, head_dim)
+    "attn_template:causal:d64": (1, 256, 8, 64),
+    "attn_template:causal:d128": (1, 256, 8, 128),
+    "attn_template:full:d64": (1, 256, 8, 64),
+    "attn_template:full:d128": (1, 256, 8, 128),
+    "attn_template:window64:d64": (1, 512, 8, 64),
+    "attn_template:window256:d64": (1, 512, 8, 64),
+    "attn_template:decode:d64": (4, 512, 8, 64),
+    "attn_template:decode:d128": (4, 512, 8, 128),
 }
 
 

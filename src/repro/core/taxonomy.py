@@ -192,6 +192,9 @@ _reg(
     "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr", "custom_lin",
     "shard_map", "smap", "named_call", "pvary",
 )
+# a pallas_call appearing untagged in a capture is a hand-written fused
+# kernel (e.g. an attn_template variant) invoked outside its scope tag
+_reg(OpGroup.FUSED, "pallas_call")
 
 
 #: Higher-order primitives the eager interpreter descends into (inlining

@@ -1,133 +1,36 @@
-"""Pallas TPU flash attention (causal / sliding-window / GQA).
+"""Pallas TPU flash attention — now a thin pre-built spec.
 
-Fuses the paper's Logit-Computation (softmax), Memory (head reshapes,
-(S, S) score materialization) and Elem-wise (scale, mask) groups into the
-two attention GEMMs. HBM traffic drops from O(S^2) score reads/writes to
-O(S) tile streaming — the enabling optimization for the 32k prefill shapes.
-
-Schedule: grid = (B*Hq, nq, nk) with the KV dimension innermost. TPU grids
-execute sequentially on a core, so the (m, l, acc) online-softmax carry
-lives in VMEM scratch across the nk steps of one (head, q-block); the
-output tile is written once on the last KV step (revisited-block pattern).
-
-VMEM budget per step at (bq, bk, D) = (128, 128, 128):
-q/k/v tiles 3 x 64 KiB (bf16) + acc 64 KiB f32 + s/p 64 KiB f32 — well
-under the ~16 MiB VMEM with double buffering.
-
-The wrapper handles GQA by indexing the KV block row ``h // group`` —
-no KV head replication in HBM (Memory-group saving vs the naive
-``repeat_interleave`` formulation).
+The online-softmax schedule that used to live here (grid ``(B*Hq, nq,
+nk)`` with KV innermost, (m, l, acc) carried in VMEM scratch, output
+written on the last KV step) is the shared body of the attention template
+family in :mod:`repro.kernels.attn_template`. This module keeps the
+historical public entry point as a delegate so existing call sites and
+the ``flash_attention`` row in ``ops.KERNEL_SPECS`` are unchanged: the
+``causal``/``window`` flag pair maps onto the template's mask fragments
+(``causal=True, window=None`` -> the ``causal`` fragment, a ``window``
+value adds the sliding-window term, ``causal=False, window=None`` -> the
+``full`` fragment). See docs/kernels.md for the family and the VMEM
+budget reasoning.
 """
 
 from __future__ import annotations
 
-import functools
-import math
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.kernels.attn_template import NEG_INF, attention_core
 
-NEG_INF = -1e30
-
-
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, window: Optional[int],
-                  bq: int, bk: int, nk: int, skv: int, q_offset: int):
-    i = pl.program_id(1)
-    j = pl.program_id(2)
-
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0].astype(jnp.float32)            # (bq, D)
-    k = k_ref[0].astype(jnp.float32)            # (bk, D)
-    v = v_ref[0].astype(jnp.float32)            # (bk, D)
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-
-    qpos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = kpos < skv                            # KV padding
-    if causal:
-        mask &= qpos >= kpos
-    if window is not None:
-        mask &= (qpos - kpos) < window
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_ref[...]                          # (bq, 1)
-    l_prev = l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-
-    @pl.when(j == nk - 1)
-    def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+__all__ = ["NEG_INF", "flash_attention"]
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None, q_offset: int = 0,
                     scale: Optional[float] = None,
+                    softcap: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False):
-    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
-    b, sq, hq, d = q.shape
-    _, skv, hkv, _ = k.shape
-    g = hq // hkv
-    scale = scale if scale is not None else 1.0 / math.sqrt(d)
-    bq = min(block_q, max(sq, 8))
-    bk = min(block_k, max(skv, 8))
-
-    pq = -sq % bq
-    pk = -skv % bk
-    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
-    if pq:
-        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
-    if pk:
-        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
-        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
-    nq = qf.shape[1] // bq
-    nk = kf.shape[1] // bk
-
-    def kv_row(h, i, j):
-        return ((h // hq) * hkv + (h % hq) // g, j, 0)
-
-    out = pl.pallas_call(
-        functools.partial(_flash_kernel, scale=scale, causal=causal,
-                          window=window, bq=bq, bk=bk, nk=nk, skv=skv,
-                          q_offset=q_offset),
-        grid=(b * hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-            pl.BlockSpec((1, bk, d), kv_row),
-            pl.BlockSpec((1, bk, d), kv_row),
-        ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct(qf.shape, v.dtype),
-        scratch_shapes=[
-            _vmem((bq, 1)),
-            _vmem((bq, 1)),
-            _vmem((bq, d)),
-        ],
-        interpret=interpret,
-    )(qf, kf, vf)
-    out = out[:, :sq].reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
-    return out
-
-
-def _vmem(shape, dtype=jnp.float32):
-    from jax.experimental.pallas import tpu as pltpu
-    return pltpu.VMEM(shape, dtype)
+    """q: (B, Sq, Hq, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv)
+    -> (B, Sq, Hq, Dv)."""
+    return attention_core(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, scale=scale, softcap=softcap,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)

@@ -93,7 +93,8 @@ geglu = _autojit(_glu.geglu,
                  static=("block_rows", "block_cols", "interpret"))
 flash_attention = _autojit(_fa.flash_attention,
                            static=("causal", "window", "q_offset", "scale",
-                                   "block_q", "block_k", "interpret"))
+                                   "softcap", "block_q", "block_k",
+                                   "interpret"))
 softmax_xent = _autojit(_xent.softmax_xent,
                         static=("block_rows", "block_vocab", "interpret"))
 nms = _autojit(_nms.nms,
@@ -149,3 +150,43 @@ KERNEL_SPECS: Dict[str, KernelSpec] = dict((
           block_rows=8, block_vocab=2048),
     _spec("nms", nms, "pad"),
 ))
+
+
+# ---------------------------------------------------------------------------
+# Template-generated attention variants (repro.kernels.attn_template)
+# ---------------------------------------------------------------------------
+
+def register_template_kernel(spec, raw_fn, static) -> Callable:
+    """Auto-registration hook for :func:`attn_template.make_attention`.
+
+    Wraps the generated raw entry point in :func:`_autojit` (so every
+    variant inherits the interpret-resolution contract) and records it in
+    ``KERNEL_SPECS`` under ``attn_template:<name>`` at spec-instantiation
+    time — nglint NG005 then vets the variant like any hand-written
+    kernel, and flags instantiated specs missing from this table.
+    """
+    from repro.kernels import attn_template as _tmpl
+
+    public = _autojit(raw_fn, static=static)
+    key = _tmpl.kernel_key(spec)
+    KERNEL_SPECS[key] = KernelSpec(
+        name=key, fn=public,
+        block_defaults={"block_q": spec.block_q, "block_k": spec.block_k},
+        handles_remainder="clamp")
+    return public
+
+
+# instantiate (and thereby register) the built-in variants; attn_template
+# defers this to the end of our import so the _autojit machinery exists
+from repro.kernels import attn_template as _tmpl  # noqa: E402
+
+for _s in _tmpl.BUILTIN_SPECS:
+    if _s.name not in _tmpl._PUBLIC:
+        _tmpl.make_attention(_s)
+del _s
+
+#: the decode-1q template variant — the fused decode kernel the engine
+#: and the ``fused_attn_decode`` fusion pattern route through
+attn_decode_template = _tmpl.get("decode")
+#: the full/cross variant (vision encoder, detector query refinement)
+attn_full_template = _tmpl.get("full")

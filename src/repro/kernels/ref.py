@@ -63,6 +63,10 @@ def rope(x, positions, base: float = 10000.0, fraction: float = 1.0):
         if rot < d else out.astype(x.dtype)
 
 
+#: alias for call sites where a ``rope`` keyword shadows the function
+rope_fn = rope
+
+
 def layer_norm(x, scale, bias, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     mean = jnp.mean(xf, axis=-1, keepdims=True)
@@ -78,26 +82,81 @@ def swiglu(gate, up):
 
 
 def attention(q, k, v, causal: bool = True, window: Optional[int] = None,
-              q_offset: int = 0):
-    """Naive full-matrix GQA attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+              q_offset: int = 0, lengths=None, scale: Optional[float] = None,
+              softcap: Optional[float] = None, rope: bool = False,
+              rope_base: float = 10000.0):
+    """Naive full-matrix GQA attention — the attn_template ground truth.
+
+    q: (B,Sq,Hq,Dk); k: (B,Skv,Hkv,Dk); v: (B,Skv,Hkv,Dv) -> (B,Sq,Hq,Dv).
+    Covers every template mask fragment: ``causal``/``window`` flags,
+    cross-attention (``causal=False, window=None``), and per-row valid KV
+    prefixes (``lengths`` (B,), the decode-1q mask). A fully-masked query
+    row yields exact zeros — the kernels' epilogue guard contract.
+    """
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
     g = hq // hkv
+    if rope:
+        pos = jnp.broadcast_to(q_offset + jnp.arange(sq), (b, sq))
+        q = rope_fn(q, pos, base=rope_base)
+        k = rope_fn(k, jnp.broadcast_to(jnp.arange(skv), (b, skv)),
+                    base=rope_base)
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
     qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
-    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) / math.sqrt(d)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
     qpos = q_offset + jnp.arange(sq)
     kpos = jnp.arange(skv)
-    mask = jnp.ones((sq, skv), bool)
+    mask = jnp.ones((b, sq, skv), bool)
     if causal:
-        mask &= qpos[:, None] >= kpos[None, :]
+        mask &= (qpos[:, None] >= kpos[None, :])[None]
     if window is not None:
-        mask &= (qpos[:, None] - kpos[None, :]) < window
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+        mask &= ((qpos[:, None] - kpos[None, :]) < window)[None]
+    if lengths is not None:
+        lv = jnp.asarray(lengths, jnp.int32).reshape(b)
+        mask &= kpos[None, None, :] < lv[:, None, None]
+    mb = mask[:, None, None]                       # (B,1,1,Sq,Skv)
+    s = jnp.where(mb, s, NEG_INF)
+    p = jnp.where(jnp.any(mb, axis=-1, keepdims=True),
+                  jax.nn.softmax(s, axis=-1), 0.0)
     o = jnp.einsum("bkgqt,btkd->bkgqd", p, vf)
-    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d).astype(v.dtype)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dv).astype(v.dtype)
+
+
+def decode_attention(q, k, v, lengths, scale: Optional[float] = None,
+                     softcap: Optional[float] = None):
+    """One-query decode over a per-row valid KV prefix (``ng:fused`` oracle).
+
+    Mirrors the unfused decode path in ``models/attention.attn_decode``
+    operation-for-operation (grouped einsums, the ``nn.softmax`` max-shift
+    formula) so routing a jnp-backend engine through the fused operator
+    stays bit-identical to the unfused op chain, while agreeing with the
+    ``attn_template:decode`` kernel to float tolerance.
+    """
+    b, _, hq, d = q.shape                          # (B, 1, Hq, Dk)
+    t, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+    qh = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(t)[None, :] \
+        < jnp.asarray(lengths, jnp.int32).reshape(b)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    p = jnp.where(jnp.any(valid, axis=-1)[:, None, None, None], p, 0.0)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, dv)
 
 
 def paged_kv_gather(pool, block_table, max_len: int):

@@ -142,7 +142,11 @@ def chunked_attention(q, k, v, *, causal: bool = True,
             (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
                                           jnp.arange(nk))
         with jax.named_scope(nn.scope_tag(OpGroup.LOGIT, "softmax_norm")):
-            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            # a fully-masked query row (window past the KV depth, pad rows)
+            # keeps m at the finite NEG_INF init with l counting exp(0)
+            # terms — emit zeros, not the mean(v) garbage of acc / l
+            out = jnp.where(m[..., None] > NEG_INF * 0.5,
+                            acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
         return None, out  # (B, Hkv, G, cq, Dv)
 
     _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
@@ -219,7 +223,10 @@ def _flash_fwd_impl(q, k, v, causal, window, q_offset, chunk_q, chunk_kv,
 
         (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
         lsafe = jnp.maximum(l, 1e-30)
-        out = acc / lsafe[..., None]
+        # same fully-masked-row guard as chunked_attention / the Pallas
+        # template epilogue: rows that saw no real score emit zeros
+        out = jnp.where(m[..., None] > NEG_INF * 0.5,
+                        acc / lsafe[..., None], 0.0)
         lse = m + jnp.log(lsafe)
         return None, (out, lse)
 
@@ -530,13 +537,33 @@ def attn_decode(params, x, cfg: ModelConfig, kind: str, cache: dict,
         cpos = kv_write(cache["pos"], pos[:, None], slot)
         valid = (cpos >= 0) & (cpos <= pos[:, None]) \
             & (pos[:, None] - cpos < w)
+        # ring invariant: slot j holds the last position ≡ j (mod w), so
+        # the set of valid slots is exactly the first min(pos+1, w) —
+        # which is what the decode-1q template masks by prefix length
+        lengths = jnp.minimum(pos + 1, w)
         new_cache = {"k": k, "v": v, "pos": cpos}
     else:
         k = nn.kv_cache_update(cache["k"], k_new, pos)
         v = nn.kv_cache_update(cache["v"], v_new, pos)
         t = k.shape[1]
         valid = jnp.arange(t)[None, :] <= pos[:, None]
+        lengths = pos + 1
         new_cache = {"k": k, "v": v}
+
+    backend = nn.get_backend()
+    if nn.fusion_enabled():
+        # one fused operator (attn_template:decode on kernel backends)
+        o = nn.fused_attn_decode(q, k, v, lengths,
+                                 softcap=cfg.attn_logit_softcap)
+        o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+        return nn.linear(o, params["wo"].astype(x.dtype)), new_cache
+    if backend != "jnp":
+        from repro.kernels import ops as kops
+        o = kops.attn_decode_template(
+            q, k, v, lengths, softcap=cfg.attn_logit_softcap,
+            interpret=None if backend == "pallas" else True)
+        o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+        return nn.linear(o, params["wo"].astype(x.dtype)), new_cache
 
     scale = 1.0 / math.sqrt(hd)
     qh = q.reshape(b, hkv, g, hd)
@@ -547,7 +574,8 @@ def attn_decode(params, x, cfg: ModelConfig, kind: str, cache: dict,
         s = jnp.einsum("bkgd,btkd->bkgt", qh, k,
                        preferred_element_type=jnp.float32) * scale
     s = _softcap(s, cfg.attn_logit_softcap)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    with jax.named_scope(nn.scope_tag(OpGroup.ELEMENTWISE, "attn_mask")):
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = nn.softmax(s, axis=-1)
     with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_pv")):
         o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
@@ -642,9 +670,18 @@ def mla_forward(params, x, cfg: ModelConfig, positions):
         [k_nope, jnp.broadcast_to(kr[:, :, None, :],
                                   (*kr.shape[:2], h, cfg.qk_rope_dim))],
         axis=-1)
-    out = flash_attention_jnp(q, k, v, causal=cfg.causal,
-                              chunk_q=cfg.attn_chunk_q,
-                              chunk_kv=cfg.attn_chunk_kv)
+    backend = nn.get_backend()
+    if backend != "jnp":
+        # the causal template handles Dv != Dk (nope+rope keys, v_head_dim
+        # values), so MLA prefill routes through the same Pallas body
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q, k, v, causal=cfg.causal,
+            interpret=None if backend == "pallas" else True)
+    else:
+        out = flash_attention_jnp(q, k, v, causal=cfg.causal,
+                                  chunk_q=cfg.attn_chunk_q,
+                                  chunk_kv=cfg.attn_chunk_kv)
     return nn.linear(out.reshape(*x.shape[:2], h * vd),
                      params["wo"].astype(x.dtype))
 
@@ -691,17 +728,41 @@ def mla_decode(params, x, cfg: ModelConfig, cache: dict, pos):
     # absorb W_uk into the query: score in latent space
     q_lat = nn.einsum("bqhn,rhn->bqhr", q_nope, params["w_uk"].astype(x.dtype))
     scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
-    with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_qk")):
-        s = (jnp.einsum("bqhr,btr->bhqt", q_lat, c,
-                        preferred_element_type=jnp.float32) +
-             jnp.einsum("bqhp,btp->bhqt", q_rope, kr,
-                        preferred_element_type=jnp.float32)) * scale
-    valid = jnp.arange(t)[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = nn.softmax(s, axis=-1)
-    with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_pv")):
-        ctx = jnp.einsum("bhqt,btr->bqhr", p.astype(c.dtype), c,
-                         preferred_element_type=jnp.float32)
+    backend = nn.get_backend()
+    if nn.fusion_enabled() or backend != "jnp":
+        # decode-1q spec over the latent cache: q/k live in the
+        # concatenated (r + rope) latent space (Hkv=1, GQA group = H),
+        # values are the r-dim latent itself (Dv != Dk), and the W_uv
+        # up-projection stays OUTSIDE the kernel as the epilogue. The
+        # concatenated score sums in one dot where the unfused path sums
+        # two einsums — ulp-level, not bit-identical (docs/kernels.md).
+        q_eff = jnp.concatenate([q_lat, q_rope.astype(q_lat.dtype)],
+                                axis=-1)
+        k_eff = jnp.concatenate([c, kr], axis=-1)[:, :, None, :]
+        v_eff = c[:, :, None, :]
+        lengths = pos + 1
+        if nn.fusion_enabled():
+            ctx = nn.fused_attn_decode(q_eff, k_eff, v_eff, lengths,
+                                       scale=scale)
+        else:
+            from repro.kernels import ops as kops
+            ctx = kops.attn_decode_template(
+                q_eff, k_eff, v_eff, lengths, scale=scale,
+                interpret=None if backend == "pallas" else True)
+    else:
+        with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_qk")):
+            s = (jnp.einsum("bqhr,btr->bhqt", q_lat, c,
+                            preferred_element_type=jnp.float32) +
+                 jnp.einsum("bqhp,btp->bhqt", q_rope, kr,
+                            preferred_element_type=jnp.float32)) * scale
+        valid = jnp.arange(t)[None, :] <= pos[:, None]
+        with jax.named_scope(nn.scope_tag(OpGroup.ELEMENTWISE,
+                                          "attn_mask")):
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = nn.softmax(s, axis=-1)
+        with jax.named_scope(nn.scope_tag(OpGroup.GEMM, "attn_pv")):
+            ctx = jnp.einsum("bhqt,btr->bqhr", p.astype(c.dtype), c,
+                             preferred_element_type=jnp.float32)
     out = nn.einsum("bqhr,rhv->bqhv", ctx.astype(x.dtype),
                     params["w_uv"].astype(x.dtype))
     out = out.reshape(b, 1, h * vd)

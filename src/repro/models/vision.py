@@ -92,6 +92,18 @@ def init_vision(key, cfg: ModelConfig) -> dict:
         params["cls_head"] = {"w": dense_init(ks[-5], (d, cfg.n_classes),
                                               dtype=pd),
                               "b": jnp.zeros((cfg.n_classes,), pd)}
+        # DETR-style query refinement: the top-K peak cells cross-attend
+        # the full feature map (the attn_template ``full`` fragment) and
+        # regress a box correction
+        xk = jax.random.split(ks[-6], 5)
+        params["xattn"] = {
+            "wq": dense_init(xk[0], (d, d), dtype=pd),
+            "wk": dense_init(xk[1], (d, d), dtype=pd),
+            "wv": dense_init(xk[2], (d, d), dtype=pd),
+            "wo": dense_init(xk[3], (d, d), dtype=pd),
+            "delta": {"w": dense_init(xk[4], (d, 4), dtype=pd),
+                      "b": jnp.zeros((4,), pd)},
+        }
     else:
         params["head"] = {"w": dense_init(ks[-3], (d, cfg.n_classes),
                                           dtype=pd),
@@ -172,6 +184,34 @@ def _anchor_grid(gh: int, gw: int, stride: float, dtype):
         return anchors.astype(dtype)
 
 
+def _refine_boxes(xp, tokens, idx, top_b, stride: float, cfg: ModelConfig):
+    """DETR-style second stage: top-K peak queries cross-attend the full
+    feature map and regress a per-box correction (in units of the feature
+    stride). Non-causal cross attention — the template family's ``full``
+    fragment on the kernel backends, the flash jnp twin otherwise.
+    """
+    from repro.models.attention import flash_attention_jnp
+
+    hq = cfg.n_heads
+    with jax.named_scope(scope_tag(OpGroup.MEMORY, "gather_queries")):
+        qf = jnp.take_along_axis(tokens, idx[..., None], axis=1)  # (B,K,D)
+    q = nn.split_heads(nn.linear(qf, xp["wq"].astype(tokens.dtype)), hq)
+    kk = nn.split_heads(nn.linear(tokens, xp["wk"].astype(tokens.dtype)), hq)
+    vv = nn.split_heads(nn.linear(tokens, xp["wv"].astype(tokens.dtype)), hq)
+    backend = nn.get_backend()
+    if backend != "jnp":
+        from repro.kernels import ops as kops
+        att = kops.attn_full_template(
+            q, kk, vv, interpret=None if backend == "pallas" else True)
+    else:
+        att = flash_attention_jnp(q, kk, vv, causal=False)
+    att = nn.linear(nn.merge_heads(att), xp["wo"].astype(tokens.dtype))
+    delta = nn.linear(att, xp["delta"]["w"].astype(tokens.dtype),
+                      xp["delta"]["b"])                           # (B,K,4)
+    with jax.named_scope(scope_tag(OpGroup.ELEMENTWISE, "box_refine")):
+        return top_b + delta.astype(top_b.dtype) * stride
+
+
 def detect_forward(params, images, cfg: ModelConfig):
     """Single-stage detection: (B, C, H, W) ->
     (boxes (B, K, 4) xyxy, scores (B, K), keep (B, K) bool), K=det_top_k.
@@ -216,6 +256,9 @@ def detect_forward(params, images, cfg: ModelConfig):
         top_s, idx = jax.lax.top_k(scores, k)
     with jax.named_scope(scope_tag(OpGroup.MEMORY, "gather_boxes")):
         top_b = jnp.take_along_axis(boxes, idx[..., None], axis=1)
+
+    if "xattn" in params:
+        top_b = _refine_boxes(params["xattn"], t, idx, top_b, stride, cfg)
 
     keep = jnp.stack([
         nn.nms(top_b[i].astype(jnp.float32), top_s[i],

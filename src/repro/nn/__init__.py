@@ -634,6 +634,29 @@ def _fused_qdq(x):
     return _dequantize_int8_impl(q, s, x.dtype)
 
 
+@tagged(OpGroup.FUSED, "fused_attn_decode")
+def fused_attn_decode(q, k, v, lengths, scale: Optional[float] = None,
+                      softcap: Optional[float] = None):
+    """One-query decode attention over a per-row valid KV prefix as ONE
+    operator — the ``attn_template:decode`` variant on the kernel backends.
+
+    q: (B, 1, Hq, Dk); k: (B, T, Hkv, Dk); v: (B, T, Hkv, Dv);
+    lengths: (B,) int32 attendable prefix -> (B, 1, Hq, Dv) f32.
+
+    Unfused, a decode step dispatches the qk GEMM, mask, softmax and pv
+    GEMM as four operators with an HBM round-trip of the (B, H, T) score
+    rows between each — the chain ``FUSION_PATTERNS`` rewrites to this
+    record. The jnp fallback mirrors the unfused op sequence exactly
+    (bit-identical tokens); the Pallas variant agrees to float tolerance.
+    """
+    if _BACKEND != "jnp":
+        return _kernels().attn_decode_template(
+            q, k, v, lengths, scale=scale, softcap=softcap,
+            interpret=_interpret())
+    return _ref().decode_attention(q, k, v, lengths, scale=scale,
+                                   softcap=softcap)
+
+
 # ---------------------------------------------------------------------------
 # Collective sites (manual tensor parallelism inside shard_map bodies).
 #

@@ -372,6 +372,14 @@ def make_paged_decode_step(cfg: ModelConfig, max_len: int, mesh=None,
     ``lm_decode`` program (same sampling tail as ``make_serve_step``), and
     scatters each sequence's new KV row back into its block.
 
+    With ``fused=True`` the whole body runs under ``nn.fuse()``, which
+    routes every layer's attention over the gathered paged KV through the
+    ``attn_template:decode`` spec (one fused qk->mask->softmax->pv
+    operator per layer, ``fused_attn_decode``) — the per-row ``pos + 1``
+    valid-prefix lengths are exactly the decode-1q template's scalar-
+    prefetch mask, so paged gather + template kernel compose without any
+    paged-specific attention code.
+
     A mesh whose ``model`` axis is larger than 1 selects the manual-TP
     shard_map path (see ``repro.models.tp``): bit-identical token streams,
     explicit COLLECTIVE primitives in the captured program.
